@@ -1,0 +1,62 @@
+"""Fig 6.3 + 6.4: HCRAC hit rate and speedup vs capacity.
+
+Paper claims: 128 entries -> 38% (1c) / 66% (8c) hit rate; speedup 8.8%
+at 128 entries, 10.6% at 1024 (8-core); diminishing beyond.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import weighted_speedup
+
+CAPS = (32, 64, 128, 512, 1024)
+
+
+def run() -> list[str]:
+    rows = []
+
+    def single_hits():
+        out = {}
+        for cap in CAPS:
+            hits = [C.sim_single(n, "chargecache",
+                                 n_entries=cap)["hcrac_hit_rate"]
+                    for n in C.SINGLE_NAMES]
+            out[cap] = float(np.mean(hits))
+        return out
+
+    h1, us1 = C.timed(single_hits)
+    rows.append(C.csv_row(
+        "hitrate_fig6.3_single", us1,
+        ";".join(f"{c}e={v:.3f}" for c, v in h1.items())))
+
+    mixes = C.eight_core_mixes()[:5 if not C.QUICK else 1]
+
+    def eight():
+        hits = {}
+        speed = {}
+        for cap in CAPS:
+            hs, sp = [], []
+            for mix in mixes:
+                b = C.sim_mix(mix, "base")
+                s = C.sim_mix(mix, "chargecache", n_entries=cap)
+                hs.append(s["hcrac_hit_rate"])
+                sp.append(weighted_speedup(b["core_end"], s["core_end"]))
+            hits[cap] = float(np.mean(hs))
+            speed[cap] = float(np.mean(sp))
+        return hits, speed
+
+    (h8, s8), us8 = C.timed(eight)
+    rows.append(C.csv_row(
+        "hitrate_fig6.3_eight", us8,
+        ";".join(f"{c}e={v:.3f}" for c, v in h8.items())))
+    rows.append(C.csv_row(
+        "speedup_fig6.4_capacity", 0,
+        ";".join(f"{c}e={v:.4f}" for c, v in s8.items())))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,27 @@
+"""Fig 4.2 + Table 6.1: bitline voltage vs initial charge; derived timings."""
+
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import charge_model as cm
+
+
+def run() -> list[str]:
+    rows = []
+    tbl, us = C.timed(cm.derived_table, (1.0, 4.0, 16.0, 64.0))
+    derived = ";".join(
+        f"{t.duration_ms:g}ms:tRCD={t.tRCD_ns:.1f}ns/tRAS={t.tRAS_ns:.1f}ns"
+        for t in tbl)
+    rows.append(C.csv_row("charge_table6.1", us, derived))
+    # Fig 4.2 monotonicity: ready time grows with idle time
+    ts = [float(cm.t_ready_ns(d)) for d in (0.0, 1.0, 16.0, 64.0)]
+    rows.append(C.csv_row(
+        "charge_fig4.2", 0,
+        f"t_ready(full)={ts[0]:.1f}ns;t_ready(64ms)={ts[3]:.1f}ns;"
+        f"monotone={all(a <= b + 1e-6 for a, b in zip(ts, ts[1:]))}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,67 @@
+"""Shared benchmark harness utilities.
+
+Workload sizes follow the thesis's methodology scaled to this container
+(the mechanism's statistics converge well before 1 B instructions); set
+``REPRO_BENCH_QUICK=1`` for CI-sized runs.
+"""
+
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from repro.core import (HCRACConfig, MechanismConfig, SimConfig, simulate,
+                        weighted_speedup)
+from repro.core.traces import (WORKLOADS, multicore_batch, random_mixes,
+                               single_core_batch)
+
+QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+
+N_REQ_1C = 20_000 if QUICK else 150_000
+N_REQ_8C = 5_000 if QUICK else 40_000
+N_MIXES = 2 if QUICK else 20
+
+SINGLE_NAMES = [w.name for w in WORKLOADS]
+
+
+def mech_config(kind: str, n_cores: int = 1, n_entries: int = 128,
+                caching_ms: float = 1.0) -> MechanismConfig:
+    """Thesis configuration: 128 entries *per core* (Table 5.1); the
+    simulator models the aggregate table."""
+    from repro.core import lowered_for_duration, ms_to_cycles
+    low = lowered_for_duration(caching_ms)
+    return MechanismConfig(
+        kind=kind,
+        hcrac=HCRACConfig(n_entries=n_entries * n_cores,
+                          caching_cycles=ms_to_cycles(caching_ms)),
+        lowered=low,
+    )
+
+
+def sim_single(name: str, kind: str, seed: int = 3, **mech_kw) -> dict:
+    batch = single_core_batch(name, N_REQ_1C, seed=seed)
+    cfg = SimConfig(mech=mech_config(kind, 1, **mech_kw), policy="open")
+    return simulate(batch, cfg)
+
+
+def sim_mix(names: list[str], kind: str, seed: int = 3, **mech_kw) -> dict:
+    batch = multicore_batch(names, N_REQ_8C, seed=seed)
+    cfg = SimConfig(mech=mech_config(kind, len(names), **mech_kw),
+                    policy="closed")
+    return simulate(batch, cfg)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.time()
+    out = fn(*args, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def eight_core_mixes() -> list[list[str]]:
+    return random_mixes(N_MIXES, 8)
+
+
+def csv_row(name: str, us: float, derived: str) -> str:
+    return f"{name},{us:.0f},{derived}"

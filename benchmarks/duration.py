@@ -1,0 +1,40 @@
+"""Fig 6.5 / Table 6.1: speedup and hit rate vs caching duration.
+
+Paper claim: 1 ms is the best duration — longer durations gain little hit
+rate but lose timing reduction (Table 6.1's tRCD/tRAS grow with duration).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import weighted_speedup
+
+DURATIONS_MS = (1.0, 4.0, 16.0)
+
+
+def run() -> list[str]:
+    mixes = C.eight_core_mixes()[:5 if not C.QUICK else 1]
+    out = {}
+    import time
+    t0 = time.time()
+    for d in DURATIONS_MS:
+        sp, hits = [], []
+        for mix in mixes:
+            b = C.sim_mix(mix, "base")
+            s = C.sim_mix(mix, "chargecache", caching_ms=d)
+            sp.append(weighted_speedup(b["core_end"], s["core_end"]))
+            hits.append(s["hcrac_hit_rate"])
+        out[d] = (float(np.mean(sp)), float(np.mean(hits)))
+    us = (time.time() - t0) * 1e6
+    best = max(out, key=lambda d: out[d][0])
+    return [C.csv_row(
+        "duration_fig6.5", us,
+        ";".join(f"{d:g}ms:sp={v[0]:.4f}/hit={v[1]:.3f}"
+                 for d, v in out.items()) + f";best={best:g}ms")]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,54 @@
+"""Fig 6.2: DRAM energy reduction of ChargeCache (avg & max, 1c / 8c).
+
+Paper claims: -1.8% avg / -6.9% max (single-core); -7.9% avg / -14.1% max
+(eight-core).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import energy as E
+
+
+def reduction(base: dict, mech: dict) -> float:
+    eb = E.energy_nj(base)["total"]
+    em = E.energy_nj(mech)["total"]
+    return 1.0 - em / eb
+
+
+def run() -> list[str]:
+    rows = []
+
+    def single():
+        red = []
+        for name in C.SINGLE_NAMES:
+            b = C.sim_single(name, "base")
+            m = C.sim_single(name, "chargecache")
+            red.append(reduction(b, m))
+        return red
+
+    red1, us1 = C.timed(single)
+    rows.append(C.csv_row(
+        "energy_fig6.2_single", us1,
+        f"avg={np.mean(red1):.4f};max={np.max(red1):.4f}"))
+
+    def eight():
+        red = []
+        for mix in C.eight_core_mixes():
+            b = C.sim_mix(mix, "base")
+            m = C.sim_mix(mix, "chargecache")
+            red.append(reduction(b, m))
+        return red
+
+    red8, us8 = C.timed(eight)
+    rows.append(C.csv_row(
+        "energy_fig6.2_eight", us8,
+        f"avg={np.mean(red8):.4f};max={np.max(red8):.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

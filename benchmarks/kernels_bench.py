@@ -1,0 +1,70 @@
+"""Kernel microbenches (interpret mode on CPU: correctness-grade timing,
+the TPU numbers come from the roofline analysis)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+
+
+def bench(fn, *args, iters=3):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.time()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.time() - t0) / iters * 1e6
+
+
+def run() -> list[str]:
+    rows = []
+    rng = np.random.default_rng(0)
+    # flash attention
+    from repro.kernels.flash_attention import ops as fa
+    B, S, H, K, hd = 1, 512, 4, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.bfloat16)
+    us = bench(lambda a, b, c: fa.flash_attention(a, b, c, causal=True),
+               q, k, v)
+    rows.append(C.csv_row("kernel_flash_attention_512", us,
+                          f"B{B}S{S}H{H}hd{hd}"))
+    # paged decode attention
+    from repro.kernels.paged_attention import ops as pa
+    W = 2048
+    kc = jnp.asarray(rng.normal(size=(B, W, K, hd)), jnp.bfloat16)
+    vc = jnp.asarray(rng.normal(size=(B, W, K, hd)), jnp.bfloat16)
+    kv_pos = jnp.arange(W, dtype=jnp.int32)
+    us = bench(lambda a: pa.decode_attention(
+        a, kc, vc, q_pos=jnp.asarray([W - 1], jnp.int32), kv_pos=kv_pos),
+        q[:, :1])
+    rows.append(C.csv_row("kernel_paged_attention_2k", us, f"W{W}"))
+    # ssm scan
+    from repro.kernels.ssm_scan import ops as ss
+    Bm, T, D, N = 1, 64, 256, 16
+    decay = jnp.asarray(rng.uniform(0.6, 1.0, (Bm, T, D, N)), jnp.float32)
+    dbu = jnp.asarray(rng.normal(size=(Bm, T, D, N)) * 0.1, jnp.float32)
+    cmat = jnp.asarray(rng.normal(size=(Bm, T, N)), jnp.float32)
+    h0 = jnp.zeros((Bm, D, N), jnp.float32)
+    us = bench(lambda a: ss.ssm_scan(a, dbu, cmat, h0), decay)
+    rows.append(C.csv_row("kernel_ssm_scan_64x256", us, f"T{T}D{D}N{N}"))
+    # hcrac lookup
+    from repro.core import hcrac as hcl
+    from repro.kernels.hcrac import ops as hc
+    cfg = hcl.HCRACConfig(n_entries=1024)
+    st = hcl.init(cfg)
+    gids = jnp.asarray(rng.integers(0, 10000, 4096), jnp.int32)
+    ts = jnp.full((4096,), 1000, jnp.int32)
+    us = bench(lambda g: hc.hcrac_lookup(cfg, st, g, ts), gids)
+    rows.append(C.csv_row("kernel_hcrac_lookup_4096", us, "1024-entry"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

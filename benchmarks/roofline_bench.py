@@ -1,0 +1,56 @@
+"""Roofline summary from the latest dry-run JSON (deliverable g): prints
+the per-cell terms as CSV and regenerates EXPERIMENTS.md §Roofline-table."""
+
+from __future__ import annotations
+
+import json
+import os
+
+
+def table_lines(cells) -> list[str]:
+    ok = [c for c in cells if c["status"] == "ok"]
+    lines = ["| arch | shape | mesh | hbm GB | fits | compute_s | memory_s "
+             "| collective_s | bound | useful |",
+             "|---|---|---|---|---|---|---|---|---|---|"]
+    for c in sorted(ok, key=lambda c: (c["mesh"], c["shape"], c["arch"])):
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {c['hbm_gb_corrected']:.1f} | {'Y' if c['fits_16gb'] else 'N'} "
+            f"| {c['compute_s']:.4g} | {c['memory_s']:.4g} "
+            f"| {c['collective_s']:.4g} | {c['bound']} "
+            f"| {c['useful_frac']:.2f} |")
+    skips = [c for c in cells if c["status"] == "skip"]
+    lines.append("")
+    lines.append(f"Skipped cells ({len(skips)}; sub-quadratic rule): "
+                 + ", ".join(sorted({c['arch'] for c in skips}))
+                 + " x long_500k x both meshes.")
+    return lines
+
+
+def run() -> list[str]:
+    path = os.environ.get("REPRO_DRYRUN_JSON", "dryrun_final.json")
+    if not os.path.exists(path):
+        return ["roofline_table,0,SKIP:no dryrun json (run launch.dryrun)"]
+    cells = json.load(open(path))
+    ok = [c for c in cells if c["status"] == "ok"]
+    err = [c for c in cells if c["status"] == "error"]
+    # refresh EXPERIMENTS.md
+    exp = "EXPERIMENTS.md"
+    if os.path.exists(exp):
+        text = open(exp).read()
+        marker = "<!-- ROOFLINE_TABLE -->"
+        if marker in text:
+            text = text.split(marker)[0] + marker + "\n\n" + \
+                "\n".join(table_lines(cells)) + "\n"
+            open(exp, "w").write(text)
+    worst = min((c for c in ok if c["shape"] == "train_4k"),
+                key=lambda c: c["compute_s"] / max(c["memory_s"],
+                                                   c["collective_s"],
+                                                   c["compute_s"]))
+    return [f"roofline_table,0,cells={len(cells)};ok={len(ok)};"
+            f"errors={len(err)};table_written={os.path.exists(exp)}"]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

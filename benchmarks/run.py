@@ -1,0 +1,44 @@
+"""Benchmark driver: one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (see EXPERIMENTS.md for the
+mapping to the thesis's tables/figures).  REPRO_BENCH_QUICK=1 shrinks
+workloads for CI.
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (capacity, charge_model_bench, duration, energy,
+                            kernels_bench, rltl, roofline_bench,
+                            serving_trace, speedup)
+    mods = [
+        ("charge_model", charge_model_bench),
+        ("rltl", rltl),
+        ("speedup", speedup),
+        ("energy", energy),
+        ("capacity", capacity),
+        ("duration", duration),
+        ("serving", serving_trace),
+        ("kernels", kernels_bench),
+        ("roofline", roofline_bench),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in mods:
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception as e:
+            failed.append(name)
+            traceback.print_exc()
+            print(f"{name},0,ERROR:{type(e).__name__}", flush=True)
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

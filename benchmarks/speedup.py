@@ -1,0 +1,71 @@
+"""Fig 6.1: speedup of ChargeCache / NUAT / CC+NUAT / LL-DRAM over DDR3.
+
+Paper claims: single-core avg +2.1% (up to 9.3%); eight-core avg +8.6%
+(CC), +2.5% (NUAT), +9.6% (CC+NUAT), LL-DRAM ~+13%; and ~67% of
+activations served with lowered timings on eight-core.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import weighted_speedup
+
+MECHS = ("chargecache", "nuat", "cc_nuat", "lldram")
+
+
+def single_core() -> dict:
+    out = {m: {} for m in MECHS}
+    lowered_frac = {}
+    for name in C.SINGLE_NAMES:
+        base = C.sim_single(name, "base")
+        for m in MECHS:
+            s = C.sim_single(name, m)
+            out[m][name] = base["total_cycles"] / max(s["total_cycles"], 1)
+            if m == "chargecache":
+                lowered_frac[name] = s["acts_lowered_frac"]
+    avg = {m: float(np.mean(list(v.values()))) for m, v in out.items()}
+    mx = {m: float(np.max(list(v.values()))) for m, v in out.items()}
+    return {"per_workload": out, "avg": avg, "max": mx,
+            "lowered_frac": float(np.mean(list(lowered_frac.values())))}
+
+
+def eight_core() -> dict:
+    out = {m: [] for m in MECHS}
+    lowered = []
+    for mix in C.eight_core_mixes():
+        base = C.sim_mix(mix, "base")
+        for m in MECHS:
+            s = C.sim_mix(mix, m)
+            out[m].append(weighted_speedup(base["core_end"], s["core_end"]))
+            if m == "chargecache":
+                lowered.append(s["acts_lowered_frac"])
+    avg = {m: float(np.mean(v)) for m, v in out.items()}
+    mx = {m: float(np.max(v)) for m, v in out.items()}
+    return {"per_mix": out, "avg": avg, "max": mx,
+            "lowered_frac": float(np.mean(lowered))}
+
+
+def run() -> list[str]:
+    rows = []
+    res1, us1 = C.timed(single_core)
+    a = res1["avg"]
+    rows.append(C.csv_row(
+        "speedup_fig6.1_single", us1,
+        f"cc={a['chargecache']:.4f};nuat={a['nuat']:.4f}"
+        f";cc_nuat={a['cc_nuat']:.4f};lldram={a['lldram']:.4f}"
+        f";cc_max={res1['max']['chargecache']:.4f}"))
+    res8, us8 = C.timed(eight_core)
+    a8 = res8["avg"]
+    rows.append(C.csv_row(
+        "speedup_fig6.1_eight", us8,
+        f"cc={a8['chargecache']:.4f};nuat={a8['nuat']:.4f}"
+        f";cc_nuat={a8['cc_nuat']:.4f};lldram={a8['lldram']:.4f}"
+        f";lowered_frac={res8['lowered_frac']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,61 @@
+"""Paper experiment driver: one workload (or 8-core mix) x all mechanisms.
+
+Run:  PYTHONPATH=src python examples/chargecache_sim.py [--workload mcf_like]
+      PYTHONPATH=src python examples/chargecache_sim.py --eight-core
+"""
+
+import argparse
+
+from repro.core import (MechanismConfig, SimConfig, simulate,
+                        weighted_speedup)
+from repro.core.energy import energy_nj
+from repro.core.rltl import rltl_fractions
+from repro.core.traces import (WORKLOADS, multicore_batch, random_mixes,
+                               single_core_batch)
+
+MECHS = ("base", "chargecache", "nuat", "cc_nuat", "lldram")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", default="soplex_like",
+                    choices=[w.name for w in WORKLOADS])
+    ap.add_argument("--eight-core", action="store_true")
+    ap.add_argument("--n-req", type=int, default=60_000)
+    args = ap.parse_args()
+
+    if args.eight_core:
+        mix = random_mixes(1, 8)[0]
+        print(f"8-core mix: {mix}")
+        batch = multicore_batch(mix, args.n_req // 4)
+        policy = "closed"
+    else:
+        print(f"workload: {args.workload}")
+        batch = single_core_batch(args.workload, args.n_req)
+        policy = "open"
+
+    results = {}
+    for kind in MECHS:
+        results[kind] = simulate(
+            batch, SimConfig(mech=MechanismConfig(kind=kind), policy=policy))
+
+    base = results["base"]
+    f = rltl_fractions(base)
+    print(f"\nRLTL: 0.125ms={f['rltl_0.125ms']:.2f}  8ms={f['rltl_8.0ms']:.2f}"
+          f"  refresh-8ms={f['refresh_8ms_frac']:.2f}")
+    print(f"{'mechanism':>12s} {'speedup':>8s} {'hit rate':>9s} "
+          f"{'lowered':>8s} {'energy':>8s}")
+    e_base = energy_nj(base)["total"]
+    for kind in MECHS:
+        r = results[kind]
+        if args.eight_core:
+            sp = weighted_speedup(base["core_end"], r["core_end"])
+        else:
+            sp = base["total_cycles"] / r["total_cycles"]
+        e = energy_nj(r)["total"] / e_base
+        print(f"{kind:>12s} {sp:8.4f} {r['hcrac_hit_rate']:9.2%} "
+              f"{r['acts_lowered_frac']:8.2%} {e:8.3f}")
+
+
+if __name__ == "__main__":
+    main()

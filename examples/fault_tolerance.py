@@ -1,0 +1,71 @@
+"""Fault-tolerance drill: train with heartbeat monitoring on a simulated
+cluster; host 3 dies at step 25 -> detect, shrink the mesh, restore the
+latest checkpoint, resume; a straggler at step 12 is re-dispatched.
+
+Run:  PYTHONPATH=src python examples/fault_tolerance.py
+"""
+
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import manager as ckpt
+from repro.configs import get
+from repro.data.pipeline import DataConfig, host_batch_at
+from repro.launch import steps as steps_lib
+from repro.models import zoo
+from repro.optim import adamw
+from repro.runtime import fault_tolerance as ft
+
+
+def main():
+    cfg = get("tinyllama-1.1b").reduced()
+    params = zoo.init_model(cfg, seed=0)
+    opt = adamw.init(params)
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8)
+    step_fn = jax.jit(steps_lib.make_train_step(
+        cfg, adamw.AdamWConfig(peak_lr=1e-3, warmup_steps=5,
+                               decay_steps=100)))
+    ckpt_dir = tempfile.mkdtemp(prefix="ft_ckpt_")
+
+    cluster = ft.SimulatedCluster(8)
+    state = {"params": params, "opt": opt}
+
+    def do_step(step, n_hosts):
+        if step == 25:
+            cluster.fail(3)
+            print(f"  [injected] host 3 fails at step {step}")
+        if step == 12:
+            cluster.make_straggler(5)
+            print(f"  [injected] host 5 becomes a straggler at step {step}")
+        batch = {k: jnp.asarray(v) for k, v in
+                 host_batch_at(data, step).items()}
+        state["params"], state["opt"], out = step_fn(
+            state["params"], state["opt"], batch)
+        return 1.0
+
+    def save_ckpt(step):
+        ckpt.save(ckpt_dir, step, state, extra={"data_step": step})
+        print(f"  checkpoint @ step {step}")
+
+    def restore_ckpt():
+        restored, step, extra = ckpt.restore(ckpt_dir, state)
+        state.update(restored)
+        print(f"  restored from step {step}")
+        return extra["data_step"]
+
+    def remesh(n_alive):
+        shape = ft.elastic_mesh_shape(n_alive * 64, 16)
+        print(f"  remesh: {n_alive} hosts alive -> data x model = {shape}")
+
+    rep = ft.fault_tolerant_run(40, cluster, ft.FTConfig(), do_step,
+                                save_ckpt, restore_ckpt, remesh,
+                                ckpt_every=10)
+    print(f"\nreport: steps={rep.steps_done} failures={rep.failures} "
+          f"redispatches={rep.redispatches} remeshes={rep.remeshes} "
+          f"restored_from={rep.restored_from}")
+
+
+if __name__ == "__main__":
+    main()

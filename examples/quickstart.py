@@ -1,0 +1,49 @@
+"""Quickstart: the two faces of the repo in ~40 lines.
+
+1. The paper: simulate a DDR3 system with and without ChargeCache.
+2. The framework: one training step of a (reduced) assigned architecture.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import MechanismConfig, SimConfig, simulate
+from repro.core.traces import single_core_batch
+
+
+def chargecache_demo():
+    print("== ChargeCache on a synthetic mcf-like workload ==")
+    batch = single_core_batch("soplex_like", 40_000, seed=1)
+    base = simulate(batch, SimConfig(mech=MechanismConfig(kind="base")))
+    cc = simulate(batch, SimConfig(mech=MechanismConfig(kind="chargecache")))
+    print(f"  baseline cycles : {base['total_cycles']:,}")
+    print(f"  chargecache     : {cc['total_cycles']:,}"
+          f"  (speedup {base['total_cycles'] / cc['total_cycles']:.3f}x)")
+    print(f"  HCRAC hit rate  : {cc['hcrac_hit_rate']:.1%}")
+    print(f"  lowered ACTs    : {cc['acts_lowered_frac']:.1%}")
+
+
+def train_step_demo():
+    print("== One train step of reduced tinyllama ==")
+    from repro.configs import get
+    from repro.launch import steps
+    from repro.models import zoo
+    from repro.models.config import ShapeConfig
+    from repro.optim import adamw
+
+    cfg = get("tinyllama-1.1b").reduced()
+    params = zoo.init_model(cfg, seed=0)
+    opt = adamw.init(params)
+    batch = zoo.make_batch(cfg, ShapeConfig("demo", 64, 4, "train"))
+    step = jax.jit(steps.make_train_step(cfg, adamw.AdamWConfig(),
+                                         microbatches=2))
+    params, opt, out = step(params, opt, batch)
+    print(f"  loss={float(out['loss']):.3f} "
+          f"grad_norm={float(out['grad_norm']):.3f}")
+
+
+if __name__ == "__main__":
+    chargecache_demo()
+    train_step_demo()

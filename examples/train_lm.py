@@ -1,0 +1,88 @@
+"""End-to-end training driver: data pipeline -> sharded train step ->
+async checkpointing -> resume.  The default preset is CPU-sized; use
+``--preset 100m --steps 300`` for the ~100M-parameter run on real
+hardware (the code path is identical — only dims change).
+
+Run:  PYTHONPATH=src python examples/train_lm.py --steps 40
+"""
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import manager as ckpt
+from repro.configs import get
+from repro.data.pipeline import DataConfig, host_batch_at
+from repro.launch import steps as steps_lib
+from repro.models import zoo
+from repro.models.config import ModelConfig
+from repro.optim import adamw
+
+PRESETS = {
+    # ~15M params: tractable on one CPU core
+    "15m": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                head_dim=32, d_ff=1024, vocab_size=8192, seq=256, batch=8),
+    # ~100M params: the assignment's "train a ~100M model" driver
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 head_dim=64, d_ff=2048, vocab_size=32000, seq=512,
+                 batch=16),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="15m", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = dataclasses.replace(
+        get("tinyllama-1.1b"), name=f"train-{args.preset}",
+        n_layers=p["n_layers"], d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], head_dim=p["head_dim"], d_ff=p["d_ff"],
+        vocab_size=p["vocab_size"])
+    print(f"model: {cfg.name}  params~{cfg.n_params()/1e6:.0f}M")
+
+    params = zoo.init_model(cfg, seed=0)
+    opt = adamw.init(params)
+    opt_cfg = adamw.AdamWConfig(peak_lr=1e-3, warmup_steps=10,
+                                decay_steps=max(args.steps, 100))
+    data = DataConfig(vocab_size=cfg.vocab_size, seq_len=p["seq"],
+                      global_batch=p["batch"], seed=0)
+    step_fn = jax.jit(steps_lib.make_train_step(cfg, opt_cfg,
+                                                microbatches=2))
+    start = 0
+    if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
+        restored, step, extra = ckpt.restore(args.ckpt_dir,
+                                             {"params": params, "opt": opt})
+        params, opt = restored["params"], restored["opt"]
+        start = extra["data_step"]
+        print(f"resumed from step {start}")
+
+    saver = ckpt.AsyncCheckpointer(args.ckpt_dir)
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in
+                 host_batch_at(data, step).items()}
+        params, opt, out = step_fn(params, opt, batch)
+        if step % 5 == 0 or step == args.steps - 1:
+            dt = (time.time() - t0) / max(step - start + 1, 1)
+            toks = p["seq"] * p["batch"] / dt
+            print(f"step {step:4d}  loss={float(out['loss']):.4f}  "
+                  f"lr={float(out['lr']):.2e}  "
+                  f"gnorm={float(out['grad_norm']):.2f}  {toks:,.0f} tok/s")
+        if (step + 1) % args.ckpt_every == 0:
+            saver.save_async(step + 1, {"params": params, "opt": opt},
+                             extra={"data_step": step + 1})
+    saver.wait()
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

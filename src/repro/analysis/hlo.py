@@ -1,0 +1,332 @@
+"""Static analyzer for post-optimization HLO text (roofline inputs).
+
+``compiled.as_text()`` on the CPU backend is post-SPMD-partitioning, so
+every shape is the *per-device* shard — exactly what a per-chip roofline
+needs.  ``cost_analysis()`` cannot be used directly because it counts
+``while`` bodies once (verified empirically; see DESIGN.md §6), so this
+module re-derives the three roofline inputs itself:
+
+* **FLOPs** — 2 * |out| * contraction for every ``dot``; convolutions are
+  counted as the equivalent dot.  Elementwise FLOPs are ignored (<2% for
+  transformer workloads, and they pipeline under the matmuls).
+* **Bytes** — operand reads + output writes of dots, plus output writes of
+  data-movement ops (copy/transpose/broadcast/dynamic-update-slice/...),
+  an HBM-traffic model for the fused steady state.
+* **Collective bytes** — summed operand sizes of all-reduce / all-gather /
+  reduce-scatter / all-to-all / collective-permute, per kind.
+
+Loops: a ``while`` body's totals are multiplied by its trip count, parsed
+from the loop condition's ``compare(..., constant(K))`` pattern (the form
+``lax.scan`` lowers to); nested loops multiply recursively.  ``fusion`` /
+``call`` / ``conditional`` costs roll up into their caller (conditional
+branches contribute their maximum — one branch executes per iteration).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+# header params may contain nested parens (tuple-typed parameters)
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of (possibly tuple-) typed value."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape(type_str: str):
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0        # fusion-boundary model (upper bound)
+    bytes_min: float = 0.0    # dot-only traffic (perfect-fusion floor)
+    coll_bytes: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    # (callee, multiplier, kind)
+    calls: list = dataclasses.field(default_factory=list)
+    # deferred fusion byte accounting: (operand types, out type, callee)
+    fusions: list = dataclasses.field(default_factory=list)
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    depth = 0
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur = m.group(1)
+                comps[cur] = []
+                depth = 1
+            continue
+        depth += line.count("{") - line.count("}")
+        if depth <= 0:
+            cur = None
+            continue
+        comps[cur].append(line)
+    return comps
+
+
+def _parse_trip_count(cond_lines: list[str]) -> int:
+    """lax.scan conditions compare the counter against constant(K)."""
+    consts = {}
+    for ln in cond_lines:
+        m = re.search(r"%?([\w.\-]+)\s*=\s*s32\[\]\s*constant\((\d+)\)", ln)
+        if m:
+            consts[m.group(1)] = int(m.group(2))
+    for ln in cond_lines:
+        if "compare(" in ln:
+            args = re.findall(r"%?([\w.\-]+)", ln.split("compare(", 1)[1])
+            for a in args:
+                if a in consts:
+                    return consts[a]
+    if len(consts) == 1:
+        return next(iter(consts.values()))
+    return 1
+
+
+def analyze(text: str, details: dict | None = None) -> dict:
+    """Analyze post-optimization HLO text -> per-device roofline inputs."""
+    comps = _split_computations(text)
+    shapes: dict[str, str] = {}          # op name -> type string (per comp ok)
+    costs: dict[str, CompCost] = {}
+
+    for cname, lines in comps.items():
+        cost = CompCost()
+        for ln in lines:
+            m = _DEF_RE.match(ln)
+            if not m:
+                continue
+            name, rhs = m.groups()
+            tm = re.match(r"((?:\([^)]*\)|[\w\[\],{}\d]+))\s", rhs)
+            type_str = tm.group(1) if tm else rhs
+            shapes[name] = type_str
+            opcode = re.match(r"(?:\([^=]*\)|[\w\[\],{}\d]+)\s+"
+                              r"([\w\-]+)", rhs)
+            opcode = opcode.group(1) if opcode else ""
+
+            def _operands(after: str):
+                inner = rhs.split(after, 1)
+                if len(inner) < 2:
+                    return []
+                return re.findall(r"%([\w.\-]+)", inner[1].split(")", 1)[0])
+
+            if re.search(r"\bdot\(", rhs):
+                out_dt, out_dims = _first_shape(type_str)
+                ops = _operands("dot(")
+                lhs_shape = shapes.get(ops[0], "") if ops else ""
+                _, lhs_dims = _first_shape(lhs_shape)
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rhs)
+                contraction = 1
+                if cdims and lhs_dims:
+                    for d in cdims.group(1).split(","):
+                        if d and int(d) < len(lhs_dims):
+                            contraction *= lhs_dims[int(d)]
+                out_n = 1
+                for d in out_dims:
+                    out_n *= d
+                cost.flops += 2.0 * out_n * max(contraction, 1)
+                d_bytes = _shape_bytes(type_str)
+                for op in ops[:2]:
+                    d_bytes += _shape_bytes(shapes.get(op, ""))
+                cost.bytes += d_bytes
+                cost.bytes_min += d_bytes
+            elif re.search(r"\bconvolution\(", rhs):
+                out_dt, out_dims = _first_shape(type_str)
+                out_n = 1
+                for d in out_dims:
+                    out_n *= d
+                win = re.search(r"window=\{size=([\dx]+)", rhs)
+                ksz = 1
+                if win:
+                    for d in win.group(1).split("x"):
+                        ksz *= int(d)
+                cost.flops += 2.0 * out_n * ksz
+                cost.bytes += 2 * _shape_bytes(type_str)
+                cost.bytes_min += 2 * _shape_bytes(type_str)
+            elif any(re.search(rf"\b{k}(?:-start)?\(", rhs)
+                     for k in _COLLECTIVES):
+                for kind in _COLLECTIVES:
+                    if re.search(rf"\b{kind}(?:-start)?\(", rhs):
+                        ops = _operands("(")
+                        nbytes = sum(_shape_bytes(shapes.get(o, ""))
+                                     for o in ops) or _shape_bytes(type_str)
+                        cost.coll_bytes[kind] += nbytes
+                        break
+            elif opcode == "fusion":
+                # HBM traffic is counted at the fusion boundary (operand
+                # reads + output write), but scan-style fusions need two
+                # corrections, resolved in a second pass once all callee
+                # bodies are known (see _fusion_bytes):
+                #  * a fusion that internally dynamic-slices a large
+                #    stacked buffer reads only the slice, not the buffer;
+                #  * a fused dynamic-update-slice root aliases its buffer
+                #    and writes only the update.
+                fm0 = re.search(r"calls=%?([\w.\-]+)", rhs)
+                cost.fusions.append(
+                    ([shapes.get(o, "") for o in _operands("fusion(")],
+                     type_str, fm0.group(1) if fm0 else None))
+            elif opcode in ("copy", "dynamic-slice", "gather", "scatter",
+                            "concatenate", "transpose"):
+                cost.bytes += 2 * _shape_bytes(type_str)
+            elif opcode == "dynamic-update-slice":
+                ops = _operands("dynamic-update-slice(")
+                upd = _shape_bytes(shapes.get(ops[1], "")) if len(ops) > 1 \
+                    else _shape_bytes(type_str)
+                cost.bytes += 2 * upd
+
+            if re.search(r"\bwhile\(", rhs):
+                bm = re.search(r"body=%?([\w.\-]+)", rhs)
+                cm = re.search(r"condition=%?([\w.\-]+)", rhs)
+                tm2 = _TRIP_RE.search(rhs)
+                trip = int(tm2.group(1)) if tm2 else None
+                if bm:
+                    cost.calls.append(
+                        ((bm.group(1), cm.group(1) if cm else None, trip),
+                         None, "while"))
+                continue
+            fm = re.search(r"(?:fusion|call)\(.*?(?:calls|to_apply)="
+                           r"%?([\w.\-]+)", rhs)
+            if fm:
+                cost.calls.append((fm.group(1), None, "call"))
+            cm = re.search(r"conditional\(", rhs)
+            if cm:
+                branches = re.findall(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"(?:true|false)_computation=%?([\w.\-]+))", rhs)
+                names = []
+                for a, b in branches:
+                    if a:
+                        names += [x.strip().lstrip("%")
+                                  for x in a.split(",")]
+                    if b:
+                        names.append(b)
+                if names:
+                    cost.calls.append((tuple(names), None, "cond"))
+        costs[cname] = cost
+
+    # second pass: resolve deferred fusion byte accounting now that every
+    # callee body is parsed.
+    def _body_has(callee: str, op: str) -> bool:
+        return any(re.search(rf"\b{op}\(", ln) for ln in comps.get(callee, []))
+
+    for cname, cost in costs.items():
+        for op_types, out_type, callee in cost.fusions:
+            out_b = _shape_bytes(out_type)
+            has_ds = callee and _body_has(callee, "dynamic-slice")
+            has_dus = callee and _body_has(callee, "dynamic-update-slice")
+            reads = 0.0
+            for t in op_types:
+                tb = _shape_bytes(t)
+                if has_ds and tb > 4 * max(out_b, 1):
+                    # stacked scan buffer sliced inside the fusion
+                    tb = out_b
+                if has_dus and t == out_type:
+                    # aliased carry buffer: read only around the update
+                    tb = 0
+                reads += tb
+            if has_dus:
+                others = [_shape_bytes(t) for t in op_types if t != out_type]
+                out_b = max(others, default=out_b // 8)
+            cost.bytes += reads + out_b
+
+    memo: dict[str, tuple] = {}
+
+    def total(cname: str):
+        if cname in memo:
+            return memo[cname]
+        c = costs.get(cname)
+        if c is None:
+            return 0.0, 0.0, 0.0, {}
+        memo[cname] = (0.0, 0.0, 0.0, {})  # cycle guard
+        f, b, bm = c.flops, c.bytes, c.bytes_min
+        coll = dict(c.coll_bytes)
+        for callee, cond, kind in c.calls:
+            if kind == "while":
+                body, cond_name, trip = callee
+                if trip is None:  # no backend_config: parse the condition
+                    trip = _parse_trip_count(comps.get(cond_name, []))
+                cf, cb, cbm, cc = total(body)
+                f += trip * cf
+                b += trip * cb
+                bm += trip * cbm
+                for k, v in cc.items():
+                    coll[k] = coll.get(k, 0.0) + trip * v
+            elif kind == "cond":
+                best = (0.0, 0.0, 0.0, {})
+                for nm in callee:
+                    t = total(nm)
+                    if t[0] + t[1] > best[0] + best[1]:
+                        best = t
+                f += best[0]
+                b += best[1]
+                bm += best[2]
+                for k, v in best[3].items():
+                    coll[k] = coll.get(k, 0.0) + v
+            else:
+                # fusion/call: FLOPs (and dot-floor bytes) of inner dots
+                # count; the fusion's boundary HBM traffic was already
+                # charged at its call site
+                cf, cb, cbm, cc = total(callee)
+                f += cf
+                bm += cbm
+                for k, v in cc.items():
+                    coll[k] = coll.get(k, 0.0) + v
+        memo[cname] = (f, b, bm, coll)
+        return memo[cname]
+
+    entry = None
+    for ln in text.splitlines():
+        m = re.match(r"ENTRY\s+%?([\w.\-]+)", ln.strip())
+        if m:
+            entry = m.group(1)
+            break
+    if entry is None:
+        entry = next(iter(comps), None)
+    f, b, bm, coll = total(entry) if entry else (0.0, 0.0, 0.0, {})
+    out = {
+        "flops": f,
+        "bytes": b,
+        "bytes_min": bm,
+        "collective_bytes": dict(coll),
+        "collective_total": float(sum(coll.values())),
+        "entry": entry,
+        "n_computations": len(comps),
+    }
+    if details is not None:
+        for cname in comps:
+            t = total(cname)
+            details[cname] = {"local_bytes": costs[cname].bytes,
+                              "rolled": t}
+    return out

@@ -1,0 +1,72 @@
+"""Roofline terms for TPU v5e from analyzed HLO (deliverable g).
+
+    compute    = FLOPs_per_device / 197e12        (bf16 MXU peak)
+    memory     = bytes_per_device / 819e9         (HBM bandwidth)
+    collective = coll_bytes_per_device / (n_links * 50e9)
+
+All inputs are per-device (post-SPMD shapes).  The dominant term is the
+step-time lower bound; MODEL_FLOPS / HLO_FLOPs measures how much compiled
+compute is useful (remat & dispatch overheads show up here).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_LINK_BW = 50e9           # bytes/s / link
+ICI_LINKS = 4                # links/chip usable in a 2-d torus slice
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float
+    bytes: float
+    coll_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    model_flops: float = 0.0
+    useful_frac: float = 0.0
+
+    def table_row(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def roofline(per_device: dict, model_flops_per_device: float = 0.0,
+             n_links: int = ICI_LINKS) -> Roofline:
+    """Memory term uses the dot-operand floor (``bytes_min``): the HBM
+    traffic of weights/activations/caches under perfect elementwise
+    fusion — what a tuned TPU compilation achieves.  The CPU backend's
+    fusion-boundary figure (``bytes``) is kept as an upper-bound
+    diagnostic (bytes_max)."""
+    f = per_device["flops"]
+    b = per_device.get("bytes_min", per_device["bytes"])
+    c = per_device.get("collective_total", 0.0)
+    terms = {
+        "compute": f / PEAK_FLOPS,
+        "memory": b / HBM_BW,
+        "collective": c / (n_links * ICI_LINK_BW),
+    }
+    bound = max(terms, key=terms.get)
+    return Roofline(
+        flops=f, bytes=b, coll_bytes=c,
+        compute_s=terms["compute"], memory_s=terms["memory"],
+        collective_s=terms["collective"], bound=bound,
+        model_flops=model_flops_per_device,
+        useful_frac=(model_flops_per_device / f) if f else 0.0,
+    )
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    """6·N·D (dense) / 6·N_active·D (MoE) per device; decode D = batch."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * cfg.n_active_params() * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * cfg.n_active_params() * tokens / n_devices
+    # decode: one token per sequence
+    return 2.0 * cfg.n_active_params() * shape.global_batch / n_devices

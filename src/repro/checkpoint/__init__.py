@@ -1,0 +1,2 @@
+"""Substrate package."""
+from repro.checkpoint.manager import save, restore, latest_step, AsyncCheckpointer

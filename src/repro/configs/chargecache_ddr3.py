@@ -1,0 +1,13 @@
+"""The paper's own system config (thesis Table 5.1): DDR3-1600 two-channel
+DRAM + 128-entry, 2-way, 1 ms ChargeCache."""
+from repro.core import (SimConfig, MechanismConfig, HCRACConfig, DDR3_1600,
+                        DDR3_SYSTEM)
+
+SIM_CONFIG = SimConfig()
+MECHANISMS = {
+    "base": MechanismConfig(kind="base"),
+    "chargecache": MechanismConfig(kind="chargecache"),
+    "nuat": MechanismConfig(kind="nuat"),
+    "cc_nuat": MechanismConfig(kind="cc_nuat"),
+    "lldram": MechanismConfig(kind="lldram"),
+}

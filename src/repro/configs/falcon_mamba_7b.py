@@ -1,0 +1,10 @@
+"""falcon-mamba-7b [arXiv:2410.05355; unverified] — mamba-1, attn-free."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b", family="ssm",
+    n_layers=64, d_model=4096, n_heads=0, n_kv_heads=0,
+    d_ff=0, vocab_size=65024,
+    ssm_state=16, ssm_conv=4, ssm_expand=2,
+    norm_kind="rms",
+)

@@ -1,0 +1,22 @@
+"""ChargeCache core: DRAM timing simulator, HCRAC, charge model, traces.
+
+The faithful reproduction of the thesis's mechanism (see DESIGN.md §2.1).
+"""
+
+from repro.core.timing import (TimingParams, DDR3_1600, DDR3_1600_CC_1MS,
+                               lowered_for_duration, ms_to_cycles,
+                               ns_to_cycles, CYCLE_NS)
+from repro.core.dram import DRAMConfig, DDR3_SYSTEM, NO_ROW
+from repro.core.hcrac import HCRACConfig, HCRACState
+from repro.core.simulator import (MechanismConfig, SimConfig, simulate,
+                                  weighted_speedup, default_nuat_bins,
+                                  RLTL_EDGES_MS)
+from repro.core import charge_model, energy, rltl, traces
+
+__all__ = [
+    "TimingParams", "DDR3_1600", "DDR3_1600_CC_1MS", "lowered_for_duration",
+    "ms_to_cycles", "ns_to_cycles", "CYCLE_NS", "DRAMConfig", "DDR3_SYSTEM",
+    "NO_ROW", "HCRACConfig", "HCRACState", "MechanismConfig", "SimConfig",
+    "simulate", "weighted_speedup", "default_nuat_bins", "RLTL_EDGES_MS",
+    "charge_model", "energy", "rltl", "traces",
+]

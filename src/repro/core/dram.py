@@ -1,0 +1,66 @@
+"""DRAM geometry, address mapping, and refresh-phase arithmetic.
+
+Matches Table 5.1 of the thesis: DDR3-1600, 1-2 channels, 1 rank/channel,
+8 banks/rank, 64 K rows/bank, 8 KB row buffer.  Banks are indexed globally
+(``channel * banks_per_channel + bank``) throughout the simulator.
+
+Refresh is modelled as the standard rolling all-bank auto-refresh: every
+``tREFI`` one of ``n_refresh_groups`` row groups is refreshed, so row ``r``
+of any bank is recharged at absolute cycles
+``(r mod G) * tREFI + k * retention``.  This gives a *closed form* for
+time-since-last-refresh, which is what NUAT [Shin+ HPCA'14] keys on — no
+per-row refresh state is needed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.core.timing import TimingParams
+
+NO_ROW = jnp.int32(-1)
+
+
+@dataclasses.dataclass(frozen=True)
+class DRAMConfig:
+    n_channels: int = 2
+    n_ranks: int = 1
+    n_banks: int = 8          # per rank
+    n_rows: int = 65536       # per bank
+    row_buffer_bytes: int = 8192
+
+    @property
+    def banks_total(self) -> int:
+        return self.n_channels * self.n_ranks * self.n_banks
+
+    def channel_of(self, global_bank):
+        return global_bank // (self.n_ranks * self.n_banks)
+
+    def global_row_id(self, global_bank, row):
+        """Unique id for (bank, row) — the HCRAC tag (thesis Eq. 6.2)."""
+        return global_bank * jnp.int32(self.n_rows) + row
+
+
+#: Default two-channel system of Table 5.1.
+DDR3_SYSTEM = DRAMConfig()
+
+
+def time_since_refresh(cfg: DRAMConfig, timing: TimingParams, row, t):
+    """Cycles since row ``row``'s group was last refreshed, at cycle ``t``.
+
+    Closed form from the rolling-refresh schedule; always in
+    ``[0, retention)``.
+    """
+    phase = jnp.mod(row, timing.n_refresh_groups) * jnp.int32(timing.tREFI)
+    return jnp.mod(t - phase, jnp.int32(timing.retention_cycles))
+
+
+def refresh_adjust(timing: TimingParams, t):
+    """Earliest cycle >= t at which a bank command may issue, accounting for
+    the all-bank refresh that occupies the first ``tRFC`` cycles of every
+    ``tREFI`` window."""
+    r = jnp.mod(t, jnp.int32(timing.tREFI))
+    busy = r < timing.tRFC
+    return jnp.where(busy, t + (jnp.int32(timing.tRFC) - r), t)

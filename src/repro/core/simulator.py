@@ -1,0 +1,448 @@
+"""Trace-driven DRAM system simulator (the Ramulator stand-in), in JAX.
+
+One ``lax.scan`` step = one memory request, end to end:
+
+1. **CPU issue model** — each core issues its next request after its
+   front-end gap, subject to an 8-entry MSHR window and (for dependent
+   requests) the previous request's completion — Table 5.1's 3-wide,
+   128-entry-window core reduced to the memory-facing behaviour that the
+   mechanism responds to.  The core with the earliest issue time goes next
+   (multi-core interleaving is therefore *dynamic*: lower DRAM latency
+   re-times every subsequent request, which is what produces speedup).
+2. **Memory controller / bank state machine** — row hit / closed / conflict
+   resolution with full DDR3 timing (tRCD/tRAS/tRP/tCL/tCWL/tBL/tRTP/tWR,
+   command and data bus serialization, rolling refresh stalls), open-row or
+   closed-row policy (closed-row uses per-bank queue-hit lookahead).
+3. **Mechanisms** — ChargeCache (HCRAC insert on PRE, lookup on ACT,
+   lowered tRCD/tRAS on hit), NUAT (closed-form time-since-refresh bins),
+   ChargeCache+NUAT (min of both), LL-DRAM (always lowered), or baseline.
+
+Stats (hit rates, RLTL histograms, latency, per-core end times, energy
+counters) accumulate in-scan with warm-up masking.
+
+Approximations vs. Ramulator (documented in DESIGN.md): FR-FCFS is
+approximated by per-bank in-order service with dynamic multi-core
+interleave + closed-row queue-hit lookahead; tRRD/tFAW are not enforced
+(second-order for the studied mechanism, which alters tRCD/tRAS only).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hcrac as hcrac_lib
+from repro.core.dram import (DRAMConfig, DDR3_SYSTEM, NO_ROW, refresh_adjust,
+                             time_since_refresh)
+from repro.core.timing import (TimingParams, DDR3_1600, ms_to_cycles)
+from repro.core import charge_model
+from repro.core.traces import TraceBatch
+
+INF = jnp.int32(2**30)
+
+#: RLTL histogram bucket upper edges, in ms (thesis Fig 3.2 uses
+#: 0.125..32 ms; we add finer + coarser tails).
+RLTL_EDGES_MS = (0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
+
+
+def default_nuat_bins(timing: TimingParams = DDR3_1600):
+    """NUAT 5PB bins: (upper-edge cycles, tRCD, tRAS), last bin = baseline.
+
+    Bin timings come from the charge model evaluated at each bin's upper
+    edge (worst case within the bin), as NUAT's SPICE methodology does.
+    """
+    edges_ms = (8.0, 16.0, 32.0, 48.0, 64.0)
+    bins = []
+    for e in edges_ms:
+        d = charge_model.derive_timings(e)
+        bins.append((ms_to_cycles(e),
+                     min(d.tRCD_cycles, timing.tRCD),
+                     min(d.tRAS_cycles, timing.tRAS)))
+    return tuple(bins)
+
+
+@dataclasses.dataclass(frozen=True)
+class MechanismConfig:
+    kind: str = "chargecache"  # base|chargecache|nuat|cc_nuat|lldram
+    hcrac: hcrac_lib.HCRACConfig = hcrac_lib.HCRACConfig()
+    lowered: TimingParams = dataclasses.field(
+        default_factory=lambda: DDR3_1600.with_reduction(4, 8))
+    nuat_bins: tuple = ()
+
+    def __post_init__(self):
+        assert self.kind in ("base", "chargecache", "nuat", "cc_nuat",
+                             "lldram"), self.kind
+        if self.kind in ("nuat", "cc_nuat") and not self.nuat_bins:
+            object.__setattr__(self, "nuat_bins", default_nuat_bins())
+
+    @property
+    def uses_cc(self) -> bool:
+        return self.kind in ("chargecache", "cc_nuat")
+
+    @property
+    def uses_nuat(self) -> bool:
+        return self.kind in ("nuat", "cc_nuat")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    dram: DRAMConfig = DDR3_SYSTEM
+    timing: TimingParams = DDR3_1600
+    mech: MechanismConfig = MechanismConfig()
+    policy: str = "open"      # "open" (1-core) | "closed" (8-core), Table 5.1
+    mshr: int = 8
+    warmup_frac: float = 0.05
+
+    def __post_init__(self):
+        assert self.policy in ("open", "closed")
+
+
+class SimState(NamedTuple):
+    # per-core issue model
+    ptr: jnp.ndarray           # [C] next request index
+    last_issue: jnp.ndarray    # [C]
+    last_complete: jnp.ndarray  # [C]
+    mshr_ring: jnp.ndarray     # [C, MSHR] completion times
+    ring_idx: jnp.ndarray      # [C]
+    core_end: jnp.ndarray      # [C] completion of last request so far
+    # per-bank state
+    open_row: jnp.ndarray      # [NB]
+    ready_act: jnp.ndarray     # [NB]
+    ready_rdwr: jnp.ndarray    # [NB]
+    ready_pre: jnp.ndarray     # [NB]
+    # per-channel buses
+    cmd_bus_free: jnp.ndarray  # [NCH]
+    data_bus_free: jnp.ndarray  # [NCH]
+    # mechanism state
+    hcrac: hcrac_lib.HCRACState
+    # accumulators (int32 scalars; NO large arrays — see perf note in _run)
+    stats: dict
+
+
+STAT_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
+             "hcrac_lookups", "row_hits", "row_closed", "row_conflicts",
+             "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts")
+
+
+class Events(NamedTuple):
+    """Per-step ACT/PRE event record (scan outputs, for the RLTL post-pass).
+
+    RLTL needs "cycle of last PRE of this row" at every ACT.  Keeping a
+    [banks, rows] array in the scan carry and gathering from it is a ~300x
+    slowdown on the CPU backend (the data-dependent read of an in-place
+    carry buffer forces a full-array copy per step — measured).  Emitting
+    events and matching ACTs to PREs in a vectorized post-pass is exact
+    and keeps the carry tiny.
+    """
+    act_gid: jnp.ndarray    # global row id of ACT, -1 if none/unmeasured
+    act_t: jnp.ndarray
+    act_ref8: jnp.ndarray   # ACT within 8 ms of the row's refresh (bool)
+    pre1_gid: jnp.ndarray   # conflict-PRE of the old open row, -1 if none
+    pre1_t: jnp.ndarray
+    pre2_gid: jnp.ndarray   # auto-PRE (closed-row policy), -1 if none
+    pre2_t: jnp.ndarray
+
+
+def _init_state(cfg: SimConfig, n_cores: int, max_len: int) -> SimState:
+    nb = cfg.dram.banks_total
+    nch = cfg.dram.n_channels
+    z = lambda *s: jnp.zeros(s, jnp.int32)
+    stats = {k: jnp.int32(0) for k in STAT_KEYS}
+    return SimState(
+        ptr=z(n_cores), last_issue=z(n_cores), last_complete=z(n_cores),
+        mshr_ring=z(n_cores, cfg.mshr), ring_idx=z(n_cores),
+        core_end=z(n_cores),
+        open_row=jnp.full((nb,), NO_ROW, jnp.int32),
+        ready_act=z(nb), ready_rdwr=z(nb), ready_pre=z(nb),
+        cmd_bus_free=z(nch), data_bus_free=z(nch),
+        hcrac=hcrac_lib.init(cfg.mech.hcrac),
+        stats=stats,
+    )
+
+
+def _acc(stats, key, val):
+    stats[key] = stats[key] + jnp.asarray(val, jnp.int32)
+
+
+def _service(cfg: SimConfig, st: SimState, t_arr, bank, row, is_write,
+             next_same, measure):
+    """Serve one request; returns (new bank/bus/hcrac state pieces, done)."""
+    T = cfg.timing
+    mech = cfg.mech
+    dram = cfg.dram
+    ch = dram.channel_of(bank)
+    stats = dict(st.stats)
+
+    t0 = jnp.maximum(t_arr, st.cmd_bus_free[ch])
+    openr = st.open_row[bank]
+    is_hit = openr == row
+    is_closed = openr == NO_ROW
+    is_conflict = ~is_hit & ~is_closed
+
+    # --- conflict path: PRE the open row (insert it into the HCRAC) ------
+    t_pre = refresh_adjust(T, jnp.maximum(t0, st.ready_pre[bank]))
+    gid_old = dram.global_row_id(bank, jnp.where(is_conflict, openr, 0))
+    hc = st.hcrac
+    if mech.uses_cc:
+        hc = hcrac_lib.insert(mech.hcrac, hc, gid_old, t_pre,
+                              enable=is_conflict)
+
+    # --- ACT ---------------------------------------------------------------
+    t_act = jnp.where(
+        is_conflict,
+        refresh_adjust(T, t_pre + T.tRP),
+        refresh_adjust(T, jnp.maximum(t0, st.ready_act[bank])))
+    needs_act = ~is_hit
+
+    gid = dram.global_row_id(bank, row)
+    if mech.uses_cc:
+        cc_hit, hc = hcrac_lib.lookup(mech.hcrac, hc, gid, t_act)
+        cc_hit = cc_hit & needs_act
+    else:
+        cc_hit = jnp.bool_(False)
+
+    rcd = jnp.int32(T.tRCD)
+    ras = jnp.int32(T.tRAS)
+    if mech.kind == "lldram":
+        rcd = jnp.int32(mech.lowered.tRCD)
+        ras = jnp.int32(mech.lowered.tRAS)
+    if mech.uses_cc:
+        rcd = jnp.where(cc_hit, mech.lowered.tRCD, rcd)
+        ras = jnp.where(cc_hit, mech.lowered.tRAS, ras)
+    tsr = time_since_refresh(dram, T, row, t_act)
+    if mech.uses_nuat:
+        n_rcd = jnp.int32(T.tRCD)
+        n_ras = jnp.int32(T.tRAS)
+        for edge, brcd, bras in reversed(mech.nuat_bins):
+            inbin = tsr < edge
+            n_rcd = jnp.where(inbin, brcd, n_rcd)
+            n_ras = jnp.where(inbin, bras, n_ras)
+        rcd = jnp.minimum(rcd, n_rcd)
+        ras = jnp.minimum(ras, n_ras)
+    lowered_used = needs_act & ((rcd < T.tRCD) | (ras < T.tRAS))
+
+    # --- READ / WRITE -------------------------------------------------------
+    t_rdwr_act = t_act + rcd
+    t_rdwr_hit = jnp.maximum(t0, st.ready_rdwr[bank])
+    t_rdwr = jnp.where(is_hit, t_rdwr_hit, t_rdwr_act)
+    cas = jnp.where(is_write, T.tCWL, T.tCL)
+    # data bus occupancy: burst occupies [t_rdwr + cas, + tBL)
+    t_rdwr = jnp.maximum(t_rdwr, st.data_bus_free[ch] - cas)
+    done = t_rdwr + cas + T.tBL
+
+    # --- bank state updates -------------------------------------------------
+    new_ready_rdwr = jnp.where(needs_act, t_act + rcd, st.ready_rdwr[bank])
+    after_rw = jnp.where(is_write, done + T.tWR, t_rdwr + T.tRTP)
+    new_ready_pre = jnp.maximum(
+        jnp.where(needs_act, t_act + ras, st.ready_pre[bank]), after_rw)
+
+    # closed-row policy: auto-precharge unless the next queued request from
+    # this core hits the same row (queue-hit lookahead).
+    auto_pre = (cfg.policy == "closed") & ~next_same
+    t_autopre = new_ready_pre
+    if mech.uses_cc:
+        hc = hcrac_lib.insert(mech.hcrac, hc, gid, t_autopre, enable=auto_pre)
+    new_open = jnp.where(auto_pre, NO_ROW, row)
+    new_ready_act = jnp.where(
+        auto_pre, t_autopre + T.tRP,
+        jnp.where(is_conflict, t_pre + T.tRP, st.ready_act[bank]))
+
+    n_cmds = (1 + needs_act.astype(jnp.int32) + is_conflict.astype(jnp.int32)
+              + auto_pre.astype(jnp.int32))
+    new_cmd_free = jnp.maximum(st.cmd_bus_free[ch], t_arr) + n_cmds
+    new_data_free = done
+
+    # --- stats ---------------------------------------------------------------
+    m = measure.astype(jnp.int32)
+    _acc(stats, "n_req", m)
+    _acc(stats, "lat_sum", m * (done - t_arr))
+    _acc(stats, "acts", m * needs_act)
+    _acc(stats, "acts_lowered", m * lowered_used)
+    if mech.uses_cc:
+        _acc(stats, "hcrac_lookups", m * needs_act)
+        _acc(stats, "hcrac_hits", m * cc_hit)
+    _acc(stats, "row_hits", m * is_hit)
+    _acc(stats, "row_closed", m * is_closed)
+    _acc(stats, "row_conflicts", m * is_conflict)
+    _acc(stats, "reads", m * ~is_write)
+    _acc(stats, "writes", m * is_write)
+    _acc(stats, "pres", m * (is_conflict.astype(jnp.int32)
+                             + auto_pre.astype(jnp.int32)))
+    _acc(stats, "act_ras_sum", m * needs_act * ras)
+    ref8 = needs_act & measure & (tsr < ms_to_cycles(8.0))
+    _acc(stats, "refresh8ms_acts", ref8)
+
+    # ACT/PRE events for the RLTL post-pass (see Events docstring).
+    events = Events(
+        act_gid=jnp.where(needs_act & measure, gid, -1),
+        act_t=t_act,
+        act_ref8=ref8,
+        pre1_gid=jnp.where(is_conflict, gid_old, -1),
+        pre1_t=t_pre,
+        pre2_gid=jnp.where(auto_pre, gid, -1),
+        pre2_t=t_autopre,
+    )
+
+    new_st = st._replace(
+        open_row=st.open_row.at[bank].set(new_open),
+        ready_act=st.ready_act.at[bank].set(new_ready_act),
+        ready_rdwr=st.ready_rdwr.at[bank].set(new_ready_rdwr),
+        ready_pre=st.ready_pre.at[bank].set(new_ready_pre),
+        cmd_bus_free=st.cmd_bus_free.at[ch].set(new_cmd_free),
+        data_bus_free=st.data_bus_free.at[ch].set(new_data_free),
+        hcrac=hc,
+        stats=stats,
+    )
+    return new_st, done, events
+
+
+def _make_step(cfg: SimConfig, trace: dict, warmup_steps: int):
+    gap = trace["gap"]
+    bank = trace["bank"]
+    row = trace["row"]
+    is_write = trace["is_write"]
+    dep = trace["dep"]
+    next_same = trace["next_same"]
+    length = trace["length"]
+    n_cores, L = gap.shape
+
+    def step(st: SimState, step_idx):
+        # 1. earliest-issue core selection
+        ptr_c = jnp.clip(st.ptr, 0, L - 1)
+        take = lambda a: jnp.take_along_axis(a, ptr_c[:, None], axis=1)[:, 0]
+        g = take(gap)
+        d = take(dep)
+        issue = jnp.maximum(st.last_issue + g,
+                            st.mshr_ring[jnp.arange(n_cores), st.ring_idx])
+        issue = jnp.maximum(issue, jnp.where(d, st.last_complete, 0))
+        issue = jnp.where(st.ptr >= length, INF, issue)
+        c = jnp.argmin(issue).astype(jnp.int32)
+        t_arr = issue[c]
+
+        measure = step_idx >= warmup_steps
+        st2, done, events = _service(cfg, st, t_arr, bank[c, ptr_c[c]],
+                                     row[c, ptr_c[c]], is_write[c, ptr_c[c]],
+                                     next_same[c, ptr_c[c]], measure)
+
+        # 2. core bookkeeping
+        st3 = st2._replace(
+            ptr=st2.ptr.at[c].add(1),
+            last_issue=st2.last_issue.at[c].set(t_arr),
+            last_complete=st2.last_complete.at[c].set(done),
+            mshr_ring=st2.mshr_ring.at[c, st2.ring_idx[c]].set(done),
+            ring_idx=st2.ring_idx.at[c].set(
+                (st2.ring_idx[c] + 1) % cfg.mshr),
+            core_end=st2.core_end.at[c].set(
+                jnp.maximum(st2.core_end[c], done)),
+        )
+        return st3, events
+
+    return step
+
+
+@functools.partial(jax.jit, static_argnums=(0, 2, 3))
+def _run(cfg: SimConfig, trace: dict, n_steps: int, warmup_steps: int):
+    """Returns (stats, core_end, events).
+
+    Perf note: the scan carry must stay small and must never be gathered
+    from with data-dependent indices — a dynamic read of a large in-place
+    carry buffer forces a full-array copy per step on the CPU backend
+    (~300x slowdown, measured).  Row-history state (for RLTL) is therefore
+    emitted as per-step *events* (scan ys, written with affine indices)
+    and matched in a post-pass.
+    """
+    n_cores, L = trace["gap"].shape
+    st = _init_state(cfg, n_cores, L)
+    step = _make_step(cfg, trace, warmup_steps)
+    st, events = jax.lax.scan(step, st, jnp.arange(n_steps, dtype=jnp.int32))
+    return st.stats, st.core_end, events
+
+
+def _rltl_post_pass(events: Events):
+    """Match each measured ACT to the most recent PRE of the same row.
+
+    Exact reconstruction of the per-row "last PRE" history: all PRE and ACT
+    events are sorted by (row id, time, kind); within a row, events strictly
+    alternate ACT ... PRE, ACT ... PRE (a row must be precharged between
+    activations), so an ACT's predecessor in the sorted order is its row's
+    latest preceding PRE (or another event meaning "cold/open history").
+    Returns the RLTL interval histogram (thesis Fig 3.2 buckets) and the
+    number of ACTs with a valid preceding PRE.
+    """
+    act_gid = np.asarray(events.act_gid)
+    act_t = np.asarray(events.act_t)
+    pre_gid = np.concatenate([np.asarray(events.pre1_gid),
+                              np.asarray(events.pre2_gid)])
+    pre_t = np.concatenate([np.asarray(events.pre1_t),
+                            np.asarray(events.pre2_t)])
+    am = act_gid >= 0
+    pm = pre_gid >= 0
+    gid = np.concatenate([act_gid[am], pre_gid[pm]])
+    t = np.concatenate([act_t[am], pre_t[pm]])
+    kind = np.concatenate([np.ones(am.sum(), np.int8),
+                           np.zeros(pm.sum(), np.int8)])  # PRE=0 < ACT=1
+    order = np.lexsort((kind, t, gid))
+    gid, t, kind = gid[order], t[order], kind[order]
+    prev_same = np.zeros(len(gid), bool)
+    prev_same[1:] = gid[1:] == gid[:-1]
+    is_act = kind == 1
+    prev_is_pre = np.zeros(len(gid), bool)
+    prev_is_pre[1:] = kind[:-1] == 0
+    valid = is_act & prev_same & prev_is_pre
+    intervals = np.where(valid, t - np.roll(t, 1), 0)[valid]
+    edges = np.array([ms_to_cycles(e) for e in RLTL_EDGES_MS])
+    bucket = np.searchsorted(edges, intervals, side="left")
+    hist = np.bincount(bucket, minlength=len(RLTL_EDGES_MS) + 1).astype(np.int64)
+    return hist, int(valid.sum())
+
+
+def simulate(batch: TraceBatch, cfg: SimConfig = SimConfig()) -> dict:
+    """Run the simulator on a trace batch; returns a python stats dict."""
+    trace = {
+        "gap": jnp.asarray(batch.gap, jnp.int32),
+        "bank": jnp.asarray(batch.bank, jnp.int32),
+        "row": jnp.asarray(batch.row, jnp.int32),
+        "is_write": jnp.asarray(batch.is_write),
+        "dep": jnp.asarray(batch.dep),
+        "next_same": jnp.asarray(batch.next_same),
+        "length": jnp.asarray(batch.length, jnp.int32),
+    }
+    n_steps = int(batch.length.sum())
+    # horizon guard: int32 cycle arithmetic
+    assert n_steps < 2**24, "trace too long for the int32 cycle horizon"
+    warmup = int(cfg.warmup_frac * n_steps)
+    raw_stats, core_end, events = _run(cfg, trace, n_steps, warmup)
+    stats = {k: np.asarray(v) for k, v in raw_stats.items()}
+    hist, rltl_total = _rltl_post_pass(events)
+    stats["rltl_hist"] = hist
+    stats["rltl_total"] = rltl_total
+    stats["core_end"] = np.asarray(core_end)
+    stats["total_cycles"] = int(stats["core_end"].max())
+    stats["n_cores"] = int(batch.length.shape[0])
+    stats["lengths"] = np.asarray(batch.length)
+    s = stats
+    s["avg_latency"] = float(s["lat_sum"]) / max(int(s["n_req"]), 1)
+    s["hcrac_hit_rate"] = (float(s["hcrac_hits"]) /
+                           max(int(s["hcrac_lookups"]), 1))
+    s["acts_lowered_frac"] = (float(s["acts_lowered"]) /
+                              max(int(s["acts"]), 1))
+    s["row_hit_rate"] = float(s["row_hits"]) / max(int(s["n_req"]), 1)
+    s["rmpkc"] = 1000.0 * float(s["acts"]) / max(s["total_cycles"], 1)
+    return stats
+
+
+def weighted_speedup(core_end_base: np.ndarray, core_end_mech: np.ndarray,
+                     alone_end: np.ndarray | None = None) -> float:
+    """Thesis metric: WS = sum_i IPC_shared_i / IPC_alone_i; with fixed
+    per-core instruction counts this reduces to cycle ratios.  The speedup
+    of a mechanism is WS_mech / WS_base."""
+    if alone_end is None:
+        alone_end = core_end_base
+    ws_base = float(np.sum(alone_end / np.maximum(core_end_base, 1)))
+    ws_mech = float(np.sum(alone_end / np.maximum(core_end_mech, 1)))
+    return ws_mech / max(ws_base, 1e-9)

@@ -1,0 +1,2 @@
+"""Substrate package."""
+from repro.data.pipeline import DataConfig, global_batch_at, host_batch_at, Prefetcher

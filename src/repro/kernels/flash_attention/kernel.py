@@ -1,0 +1,114 @@
+"""Flash-attention Pallas TPU kernel (causal / sliding-window, GQA).
+
+Canonical TPU online-softmax structure: the grid is
+``(B, K, G, n_q_blocks, n_kv_blocks)`` with the KV-block dimension
+innermost (sequential on TPU); running max / sum / output accumulators
+live in VMEM scratch and are initialized at ``kv==0`` and written out at
+``kv==n-1``.  Block shapes keep the working set (q, k, v tiles + f32
+accumulator) within VMEM, with the matmul dims MXU-aligned (head_dim and
+block sizes multiples of 128 where the model allows).
+
+Layout convention: q5 = [B, K, G, S, hd] (query heads grouped under their
+KV head), k4/v4 = [B, K, S, hd].
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                 scale, causal, window, block_q, block_kv, kv_len):
+    qi = pl.program_id(3)
+    ki = pl.program_id(4)
+    nk = pl.num_programs(4)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)          # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)             # [bkv, hd]
+    v = v_ref[0, 0].astype(jnp.float32)             # [bkv, hd]
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_kv), 0)
+    kv_pos = ki * block_kv + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (block_q, block_kv), 1)
+    ok = kv_pos < kv_len
+    if causal:
+        ok &= q_pos >= kv_pos
+    if window:
+        ok &= (q_pos - kv_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                              # [bq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0, 0] = (acc_ref[...] /
+                          jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q5, k4, v4, *, causal: bool, window: int,
+                           block_q: int = 128, block_kv: int = 128,
+                           kv_len: int | None = None,
+                           interpret: bool = False):
+    """q5: [B,K,G,S,hd]; k4/v4: [B,K,Skv,hd] -> [B,K,G,S,hd].
+
+    S and Skv are padded to block multiples by ops.py; ``kv_len`` is the
+    true (pre-padding) KV length and masks the padded tail.
+    """
+    B, K, G, S, hd = q5.shape
+    Skv = k4.shape[2]
+    kv_len = Skv if kv_len is None else kv_len
+    block_q = min(block_q, S)
+    block_kv = min(block_kv, Skv)
+    assert S % block_q == 0 and Skv % block_kv == 0
+    grid = (B, K, G, S // block_q, Skv // block_kv)
+
+    kern = functools.partial(
+        _attn_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
+        window=window, block_q=block_q, block_kv=block_kv, kv_len=kv_len)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, block_q, hd),
+                         lambda b, k, g, qi, ki: (b, k, g, qi, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b, k, g, qi, ki: (b, k, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd),
+                         lambda b, k, g, qi, ki: (b, k, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, block_q, hd),
+                               lambda b, k, g, qi, ki: (b, k, g, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct(q5.shape, q5.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, hd), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q5, k4, v4)

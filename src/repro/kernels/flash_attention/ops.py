@@ -1,0 +1,55 @@
+"""Jit'd public wrapper for the flash-attention kernel.
+
+Handles layout ([B,S,H,hd] model convention -> [B,K,G,S,hd] kernel
+convention), padding to block multiples, and backend selection
+(``interpret=True`` on CPU so the kernel body is validated everywhere).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_kernel
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv", "interpret"))
+def flash_attention(q, k, v, *, q_pos=None, kv_pos=None, causal=True,
+                    window=0, kv_valid=None, block_q=128, block_kv=128,
+                    interpret=None):
+    """q: [B,S,H,hd]; k, v: [B,Skv,K,hd] -> [B,S,H,hd].
+
+    Self-attention layout (q_pos == kv_pos == arange); decode goes through
+    the paged_attention kernel instead.
+    """
+    B, S, H, hd = q.shape
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    interp = _is_cpu() if interpret is None else interpret
+
+    q5 = q.reshape(B, S, K, G, hd).transpose(0, 2, 3, 1, 4)
+    k4 = k.transpose(0, 2, 1, 3)
+    v4 = v.transpose(0, 2, 1, 3)
+
+    bq = min(block_q, S)
+    bkv = min(block_kv, Skv)
+    pad_q = (-S) % bq
+    pad_kv = (-Skv) % bkv
+    if pad_q:
+        q5 = jnp.pad(q5, ((0, 0),) * 3 + ((0, pad_q), (0, 0)))
+    if pad_kv:
+        k4 = jnp.pad(k4, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+        v4 = jnp.pad(v4, ((0, 0), (0, 0), (0, pad_kv), (0, 0)))
+
+    out = flash_attention_kernel(q5, k4, v4, causal=causal, window=window,
+                                 block_q=bq, block_kv=bkv, kv_len=Skv,
+                                 interpret=interp)
+    out = out[:, :, :, :S]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)

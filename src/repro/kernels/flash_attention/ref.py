@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q5, k4, v4, *, causal: bool, window: int, kv_len=None):
+    """q5: [B,K,G,S,hd]; k4/v4: [B,K,Skv,hd] -> [B,K,G,S,hd]; f32 math."""
+    B, K, G, S, hd = q5.shape
+    Skv = k4.shape[2]
+    s = jnp.einsum("bkgqh,bksh->bkgqs", q5.astype(jnp.float32),
+                   k4.astype(jnp.float32)) / math.sqrt(hd)
+    q_pos = jnp.arange(S)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    ok = jnp.ones((S, Skv), bool)
+    if kv_len is not None:
+        ok &= kv_pos < kv_len
+    if causal:
+        ok &= q_pos >= kv_pos
+    if window:
+        ok &= (q_pos - kv_pos) < window
+    s = jnp.where(ok, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bksh->bkgqh", w, v4.astype(jnp.float32))
+    return out.astype(q5.dtype)

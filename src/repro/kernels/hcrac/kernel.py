@@ -1,0 +1,69 @@
+"""Batched HCRAC-lookup Pallas kernel (the paper's table as a kernel).
+
+The serving scheduler probes the hot-row table for whole batches of
+candidate pages at once (millions of probes/s at fleet rates); this kernel
+tiles the probe stream while the *entire* tag array stays VMEM-resident —
+at the thesis's 128-entry default the table is ~1 KB, and even a 64 K-entry
+variant fits VMEM ~40x over, so the kernel is compute-trivial and
+bandwidth-optimal: each probe reads its set's ways via an in-VMEM gather.
+
+Exact IIC/EC sweep semantics (same arithmetic as repro.core.hcrac._alive):
+entry in physical slot ``s`` is alive at ``t`` iff no sweep of ``s``
+occurred in ``(itime, t]``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hcrac import HCRACConfig
+
+
+def _hcrac_kernel(gid_ref, t_ref, tags_ref, itime_ref, hit_ref, *,
+                  n_sets, n_ways, sweep, caching):
+    gids = gid_ref[...]                              # [bq]
+    ts = t_ref[...]                                  # [bq]
+    tags = tags_ref[...]                             # [S, W]
+    itime = itime_ref[...]
+
+    set_idx = jax.lax.rem(gids, jnp.int32(n_sets))
+    row_tags = jnp.take(tags, set_idx, axis=0)       # [bq, W] (VMEM gather)
+    row_itime = jnp.take(itime, set_idx, axis=0)
+
+    ways = jax.lax.broadcasted_iota(jnp.int32, row_tags.shape, 1)
+    slot = set_idx[:, None] * n_ways + ways
+    phase = (slot + 1) * sweep
+    c = jnp.int32(caching)
+    alive = ((ts[:, None] - phase) // c) == ((row_itime - phase) // c)
+    match = (row_tags != -1) & alive & (row_tags == gids[:, None])
+    hit_ref[...] = jnp.any(match, axis=-1).astype(jnp.int32)
+
+
+def hcrac_lookup_kernel(cfg: HCRACConfig, tags, itime, gids, times, *,
+                        block_q: int = 256, interpret: bool = False):
+    """tags/itime: [S, W]; gids/times: [Q] -> hits [Q] int32."""
+    Q = gids.shape[0]
+    block_q = min(block_q, Q)
+    assert Q % block_q == 0
+    S, W = tags.shape
+
+    kern = functools.partial(_hcrac_kernel, n_sets=cfg.n_sets,
+                             n_ways=cfg.n_ways, sweep=cfg.sweep_period,
+                             caching=cfg.caching_cycles)
+    return pl.pallas_call(
+        kern,
+        grid=(Q // block_q,),
+        in_specs=[
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((block_q,), lambda i: (i,)),
+            pl.BlockSpec((S, W), lambda i: (0, 0)),
+            pl.BlockSpec((S, W), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Q,), jnp.int32),
+        interpret=interpret,
+    )(gids, times, tags, itime)

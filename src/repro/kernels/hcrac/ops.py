@@ -1,0 +1,32 @@
+"""Jit'd wrapper for batched HCRAC lookups (read-only probes)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hcrac import HCRACConfig, HCRACState
+from repro.kernels.hcrac.kernel import hcrac_lookup_kernel
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def hcrac_lookup(cfg: HCRACConfig, st: HCRACState, gids, times, *,
+                 block_q: int = 256, interpret=None):
+    """gids/times: [Q] int32 -> hits [Q] bool."""
+    interp = _is_cpu() if interpret is None else interpret
+    Q = gids.shape[0]
+    bq = min(block_q, max(Q, 1))
+    pad = (-Q) % bq
+    if pad:
+        gids = jnp.pad(gids, (0, pad), constant_values=-1)
+        times = jnp.pad(times, (0, pad))
+    hits = hcrac_lookup_kernel(cfg, st.tags, st.itime,
+                               gids.astype(jnp.int32),
+                               times.astype(jnp.int32),
+                               block_q=bq, interpret=interp)
+    return hits[:Q].astype(bool)

@@ -1,0 +1,99 @@
+"""Decode attention Pallas kernel over a ring-buffer KV cache.
+
+This is the ChargeCache-facing hot path: one query token per sequence
+attends to a [W]-slot cache whose slots carry explicit absolute positions
+(``kv_pos``, -1 = empty).  Masking therefore handles ring wrap-around,
+sliding windows, and partially-filled caches uniformly.
+
+Grid: ``(B, K, n_kv_blocks)`` with the cache-block dim innermost; online
+softmax state ([G, hd] f32 accumulator + [G,1] max/sum) lives in VMEM
+scratch.  The q tile is tiny ([G, hd]), so arithmetic intensity comes from
+streaming K/V blocks through VMEM — the kernel is HBM-bandwidth-bound, as
+decode attention must be; block_kv trades VMEM footprint against DMA
+efficiency (multiples of 512 numbers per lane line up with 8x128 tiling).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(qpos_ref, q_ref, k_ref, v_ref, kvpos_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale, window, block_kv):
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)              # [G, hd]
+    k = k_ref[0, 0].astype(jnp.float32)              # [bkv, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+    kv_pos = kvpos_ref[0]                            # [bkv] int32
+    q_pos = qpos_ref[0]                              # scalar in SMEM
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    ok = (kv_pos >= 0) & (kv_pos <= q_pos)
+    if window:
+        ok &= (q_pos - kv_pos) < window
+    s = jnp.where(ok[None, :], s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, -1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, -1, keepdims=True)
+    m_ref[...] = m_new
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def decode_attention_kernel(q4, k4, v4, kv_pos, q_pos, *, window: int,
+                            block_kv: int = 512, interpret: bool = False):
+    """q4: [B,K,G,hd]; k4/v4: [B,K,W,hd]; kv_pos: [B,W]; q_pos: [B]
+    -> [B,K,G,hd]."""
+    B, K, G, hd = q4.shape
+    W = k4.shape[2]
+    block_kv = min(block_kv, W)
+    assert W % block_kv == 0
+    grid = (B, K, W // block_kv)
+
+    kern = functools.partial(_decode_kernel, scale=1.0 / math.sqrt(hd),
+                             window=window, block_kv=block_kv)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, k, ki: (b,),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, k, ki: (b, k, 0, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, k, ki: (b, k, ki, 0)),
+            pl.BlockSpec((1, 1, block_kv, hd), lambda b, k, ki: (b, k, ki, 0)),
+            pl.BlockSpec((1, block_kv), lambda b, k, ki: (b, ki)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, k, ki: (b, k, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, K, G, hd), q4.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_pos, q4, k4, v4, kv_pos)

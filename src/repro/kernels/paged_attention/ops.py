@@ -1,0 +1,51 @@
+"""Jit'd wrapper for decode attention against the model's cache layout."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import decode_attention_kernel
+from repro.models import layers as L
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("window", "block_kv", "interpret",
+                                    "rope_theta"))
+def decode_attention(q, k_cache, v_cache, *, q_pos, kv_pos, window=0,
+                     kv_valid=None, rope_theta=10000.0, block_kv=512,
+                     interpret=None):
+    """Model-layout decode attention.
+
+    q: [B,1,H,hd] (pre-RoPE); k_cache/v_cache: [B,W,K,hd] (ring buffer);
+    kv_pos: [W] slot positions; q_pos: [1].  Returns [B,1,H,hd].
+    """
+    B, _, H, hd = q.shape
+    W, K = k_cache.shape[1], k_cache.shape[2]
+    G = H // K
+    interp = _is_cpu() if interpret is None else interpret
+
+    q = L.rope(q, q_pos[None], rope_theta)
+    q4 = q.reshape(B, K, G, hd)
+    k4 = k_cache.transpose(0, 2, 1, 3)
+    v4 = v_cache.transpose(0, 2, 1, 3)
+    kvp = jnp.broadcast_to(kv_pos[None], (B, W)).astype(jnp.int32)
+    qp = jnp.broadcast_to(q_pos, (B,)).astype(jnp.int32)
+    if kv_valid is not None:
+        kvp = jnp.where(kv_valid[None], kvp, -1)
+
+    pad = (-W) % min(block_kv, W)
+    if pad:
+        k4 = jnp.pad(k4, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v4 = jnp.pad(v4, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        kvp = jnp.pad(kvp, ((0, 0), (0, pad)), constant_values=-1)
+
+    out = decode_attention_kernel(q4, k4, v4, kvp, qp, window=window,
+                                  block_kv=block_kv, interpret=interp)
+    return out.reshape(B, 1, H, hd)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q4, k4, v4, kv_pos, q_pos, *, window: int):
+    """q4: [B,K,G,hd]; k4/v4: [B,K,W,hd]; kv_pos: [B,W]; q_pos: [B]."""
+    B, K, G, hd = q4.shape
+    s = jnp.einsum("bkgh,bkwh->bkgw", q4.astype(jnp.float32),
+                   k4.astype(jnp.float32)) / math.sqrt(hd)
+    ok = (kv_pos >= 0) & (kv_pos <= q_pos[:, None])
+    if window:
+        ok &= (q_pos[:, None] - kv_pos) < window
+    s = jnp.where(ok[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgw,bkwh->bkgh", w, v4.astype(jnp.float32))
+    return out.astype(q4.dtype)

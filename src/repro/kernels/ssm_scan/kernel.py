@@ -1,0 +1,72 @@
+"""Chunk-local selective-scan Pallas kernel (Mamba-1 inner loop).
+
+Computes, over a time chunk of length T:
+
+    h_t = decay_t * h_{t-1} + dBu_t          (elementwise, [bd, N])
+    y_t = sum_N  C_t * h_t                   ([bd])
+
+Grid: ``(B, n_d_blocks)`` — the channel (d_inner) dimension is tiled into
+VMEM-sized blocks and each block's scan runs independently (the recurrence
+couples only along time, never across channels).  Within the kernel the
+time loop is a ``fori_loop`` over VMEM-resident tiles; TPU-wise this is a
+VPU (elementwise) kernel — decode/train SSMs are memory-bound, so block
+sizing targets DMA efficiency, not the MXU.  Tile choice: the [bd, N]
+state keeps N (=16) in the lane dimension padded to 128 by Mosaic;
+``block_d`` is the sublane dim and should be a multiple of 8.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(decay_ref, dbu_ref, c_ref, h0_ref, hout_ref, y_ref, *, T):
+    h = h0_ref[0]                                  # [bd, N] f32
+
+    def step(t, h):
+        dec = decay_ref[0, t]                      # [bd, N]
+        dbu = dbu_ref[0, t]
+        c = c_ref[0, t]                            # [N]
+        h = dec * h + dbu
+        y_ref[0, t] = jnp.sum(h * c[None, :], axis=-1).astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, T, step, h)
+    hout_ref[0] = h
+
+
+def ssm_scan_kernel(decay, dbu, c, h0, *, block_d: int = 64,
+                    interpret: bool = False):
+    """decay/dbu: [B,T,D,N] f32; c: [B,T,N] f32; h0: [B,D,N] f32
+    -> (h_out [B,D,N], y [B,T,D])."""
+    B, T, D, N = decay.shape
+    block_d = min(block_d, D)
+    assert D % block_d == 0
+    grid = (B, D // block_d)
+
+    kern = functools.partial(_ssm_kernel, T=T)
+    hout, y = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, T, block_d, N), lambda b, d: (b, 0, d, 0)),
+            pl.BlockSpec((1, T, block_d, N), lambda b, d: (b, 0, d, 0)),
+            pl.BlockSpec((1, T, N), lambda b, d: (b, 0, 0)),
+            pl.BlockSpec((1, block_d, N), lambda b, d: (b, d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_d, N), lambda b, d: (b, d, 0)),
+            pl.BlockSpec((1, T, block_d), lambda b, d: (b, 0, d)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, D, N), jnp.float32),
+            jax.ShapeDtypeStruct((B, T, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(decay, dbu, c, h0)
+    return hout, y

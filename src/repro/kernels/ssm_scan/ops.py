@@ -1,0 +1,37 @@
+"""Jit'd wrapper for the chunk-local selective scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssm_scan.kernel import ssm_scan_kernel
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def ssm_scan(decay, dbu, c, h0, *, block_d=64, interpret=None):
+    """decay/dbu: [B,T,D,N]; c: [B,T,N]; h0: [B,D,N] -> (h_out, y [B,T,D]).
+
+    Channel dim D is padded to a block multiple; padded channels scan
+    harmlessly (zero state, zero inputs) and are sliced away.
+    """
+    interp = _is_cpu() if interpret is None else interpret
+    B, T, D, N = decay.shape
+    bd = min(block_d, D)
+    pad = (-D) % bd
+    if pad:
+        decay = jnp.pad(decay, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        dbu = jnp.pad(dbu, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pad), (0, 0)))
+    h, y = ssm_scan_kernel(decay.astype(jnp.float32),
+                           dbu.astype(jnp.float32),
+                           c.astype(jnp.float32),
+                           h0.astype(jnp.float32),
+                           block_d=bd, interpret=interp)
+    return h[:, :D], y[:, :, :D]

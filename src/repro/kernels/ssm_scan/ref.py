@@ -1,0 +1,3 @@
+"""Pure-jnp oracle for the ssm_scan kernel (= models.ssm.ssm_scan_ref)."""
+
+from repro.models.ssm import ssm_scan_ref  # noqa: F401  (the oracle)

@@ -1,0 +1,138 @@
+"""Step assembly: train_step (grad-accum microbatches + AdamW), serve steps.
+
+``make_train_step`` builds the full production step: microbatched
+value_and_grad under ``lax.scan`` (bounding activation memory — per-arch
+microbatch counts are chosen so remat residuals fit HBM), global-norm
+clipping, AdamW update.  The returned function is what the dry-run lowers
+for every ``train_4k`` cell and what examples/train drivers execute.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.models import lm, zoo
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adamw
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    flags: lm.RunFlags = lm.RunFlags(),
+                    microbatches: int = 1,
+                    grad_accum_dtype=jnp.float32):
+    """-> train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics).
+
+    ``grad_accum_dtype=bf16`` halves the per-microbatch gradient
+    reduce/accumulate wire+HBM traffic (Megatron-style bf16 grads); f32
+    remains the default — the trade-off is quantified in EXPERIMENTS.md
+    §Perf (mixtral iteration B2).
+    """
+
+    def loss_of(params, mb):
+        loss, metrics = zoo.loss_fn(params, mb, cfg, flags)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches)
+                                 + x.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+
+            def accum(carry, mb):
+                g_acc, l_acc = carry
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(grad_accum_dtype), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, grad_accum_dtype), params)
+            (g_sum, l_sum), _ = jax.lax.scan(accum, (g0, jnp.float32(0.0)),
+                                             mbs)
+            grads = jax.tree_util.tree_map(
+                lambda g: (g / microbatches).astype(jnp.float32), g_sum)
+            loss = l_sum / microbatches
+            metrics = {}
+        new_params, new_opt, opt_metrics = adamw.update(
+            opt_cfg, grads, opt_state, params)
+        out = {"loss": loss, **opt_metrics}
+        return new_params, new_opt, out
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int,
+                      flags: lm.RunFlags = lm.RunFlags()):
+    def prefill_step(params, batch):
+        return zoo.prefill_fn(params, batch, cfg, max_len, flags)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, flags: lm.RunFlags = lm.RunFlags()):
+    """One greedy decode step: logits -> next token -> new cache."""
+    def serve_step(params, cache, tokens):
+        logits, new_cache = zoo.decode_fn(params, cache, tokens, cfg, flags)
+        next_tokens = jnp.argmax(logits, -1).astype(jnp.int32)
+        return next_tokens, new_cache
+    return serve_step
+
+
+#: Per-arch target *per-device batch per microbatch* for train_4k (chosen
+#: so remat residuals [B_mb_loc x S x d_model x n_layers x 2B] fit v5e HBM
+#: next to params+optimizer).  The microbatch count adapts to the mesh's
+#: data-parallel degree.
+TRAIN_PER_DEVICE_MICROBATCH = {
+    "phi4-mini-3.8b": 4,
+    "granite-34b": 1,
+    "phi3-medium-14b": 1,
+    "tinyllama-1.1b": 8,
+    "recurrentgemma-2b": 8,
+    "whisper-small": 8,
+    "falcon-mamba-7b": 1,
+    "mixtral-8x22b": 1,
+    "phi3.5-moe-42b-a6.6b": 1,
+    "pixtral-12b": 1,
+}
+
+
+#: Archs that accumulate microbatch gradients in bf16 (Megatron-style);
+#: chosen where the f32 accumulator breaks the 16 GB/chip budget.  The
+#: quality trade-off is documented in EXPERIMENTS.md §Perf (B2).
+TRAIN_ACCUM_DTYPE = {
+    "mixtral-8x22b": jnp.bfloat16,
+}
+
+
+def accum_dtype_for(cfg: ModelConfig):
+    return TRAIN_ACCUM_DTYPE.get(cfg.name, jnp.float32)
+
+
+def dp_degree(mesh=None) -> int:
+    """Product of batch-carrying mesh axes (pod x data)."""
+    mesh = mesh or shd.get_mesh()
+    if mesh is None:
+        return 1
+    return int(mesh.shape.get("pod", 1) * mesh.shape.get("data", 1))
+
+
+def microbatches_for(cfg: ModelConfig, shape: ShapeConfig,
+                     mesh=None) -> int:
+    if shape.kind != "train":
+        return 1
+    dp = dp_degree(mesh)
+    per_dev = TRAIN_PER_DEVICE_MICROBATCH.get(cfg.name, 4)
+    mb = max(1, shape.global_batch // max(dp * per_dev, 1))
+    while shape.global_batch % (mb * dp) and mb > 1:
+        mb -= 1  # keep microbatches evenly dp-shardable
+    return mb

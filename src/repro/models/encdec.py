@@ -1,0 +1,208 @@
+"""Encoder-decoder LM (whisper-small backbone).
+
+The audio frontend (log-mel + conv downsampling) is a stub per the
+assignment: ``input_specs`` provides precomputed frame embeddings
+[B, enc_seq, d_model].  The encoder is a bidirectional transformer; the
+decoder adds cross-attention to the encoder output.  Whisper uses
+LayerNorm + GeLU (cfg.norm_kind='layer', act='gelu') and absolute
+sinusoidal positions (applied here to the stub frames and decoder tokens).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+
+def _sinusoid(S: int, d: int, dtype):
+    pos = jnp.arange(S, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(d // 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def encdec_defs(cfg: ModelConfig):
+    d, v = cfg.d_model, cfg.vocab_padded
+    enc_layer = {
+        "norm1": L.norm_defs(cfg),
+        "attn": L.attention_defs(cfg),
+        "norm2": L.norm_defs(cfg),
+        "mlp": L.mlp_defs(cfg),
+    }
+    dec_layer = {
+        "norm1": L.norm_defs(cfg),
+        "attn": L.attention_defs(cfg),
+        "normx": L.norm_defs(cfg),
+        "xattn": L.attention_defs(cfg),
+        "norm2": L.norm_defs(cfg),
+        "mlp": L.mlp_defs(cfg),
+    }
+    from repro.models.lm import _stack
+    return {
+        "embed": ParamDef((v, d), ("vocab", "embed")),
+        "enc_layers": _stack(enc_layer, cfg.n_enc_layers),
+        "enc_norm": L.norm_defs(cfg),
+        "dec_layers": _stack(dec_layer, cfg.n_layers),
+        "final_norm": L.norm_defs(cfg),
+        "head": ParamDef((d, v), ("embed", "vocab")),
+    }
+
+
+def encode(params, frames, cfg: ModelConfig, flags=None):
+    """frames: [B, F, d] stub embeddings -> encoder states [B, F, d]."""
+    attn_impl = getattr(flags, "attn_impl", "blocked") if flags else "blocked"
+    x = frames.astype(jnp.bfloat16)
+    x = x + _sinusoid(x.shape[1], x.shape[2], x.dtype)[None]
+    x = shd.shard(x, "batch", "seq", None)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        h = L.norm_apply(lp["norm1"], x, cfg)
+        y, _ = L.attention_apply(lp["attn"], h, cfg, q_pos=pos, kv_pos=pos,
+                                 causal=False, attn_impl=attn_impl)
+        x = x + y
+        h = L.norm_apply(lp["norm2"], x, cfg)
+        x = x + L.mlp_apply(lp["mlp"], h, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+    return L.norm_apply(params["enc_norm"], x, cfg)
+
+
+def decode_train(params, enc_out, tokens, cfg: ModelConfig, flags=None):
+    """Teacher-forced decoder forward.  Returns hidden states [B, S, d]."""
+    attn_impl = getattr(flags, "attn_impl", "blocked") if flags else "blocked"
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    x = x + _sinusoid(x.shape[1], x.shape[2], x.dtype)[None]
+    x = shd.shard(x, "batch", "seq", None)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    epos = jnp.arange(enc_out.shape[1], dtype=jnp.int32)
+
+    def body(x, lp):
+        h = L.norm_apply(lp["norm1"], x, cfg)
+        y, _ = L.attention_apply(lp["attn"], h, cfg, q_pos=pos, kv_pos=pos,
+                                 causal=True, attn_impl=attn_impl)
+        x = x + y
+        h = L.norm_apply(lp["normx"], x, cfg)
+        y, _ = L.attention_apply(lp["xattn"], h, cfg, cross_x=enc_out,
+                                 q_pos=pos, kv_pos=epos, causal=False,
+                                 attn_impl=attn_impl)
+        x = x + y
+        h = L.norm_apply(lp["norm2"], x, cfg)
+        x = x + L.mlp_apply(lp["mlp"], h, cfg)
+        return x, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec_layers"])
+    return L.norm_apply(params["final_norm"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, flags=None):
+    """batch: frames [B,F,d], tokens [B,S], targets [B,S]."""
+    from repro.models import lm
+    enc = encode(params, batch["frames"], cfg, flags)
+    x = decode_train(params, enc, batch["tokens"], cfg, flags)
+    mask = jnp.ones(batch["targets"].shape, jnp.float32)
+    loss = lm.chunked_ce(params, x, batch["targets"], mask, cfg)
+    return loss, {"nll": loss, "aux": jnp.float32(0.0)}
+
+
+# ------------------------------------------------------------------ serving
+
+def prefill(params, frames, tokens, cfg: ModelConfig, max_len: int,
+            flags=None):
+    """Encode + teacher-force the prompt tokens; build the decode cache:
+    per-layer self-attention ring cache + precomputed cross K/V."""
+    attn_impl = getattr(flags, "attn_impl", "blocked") if flags else "blocked"
+    enc = encode(params, frames, cfg, flags)
+    B, S = tokens.shape
+    K, hd = cfg.n_kv_heads, cfg.hd
+    W = max_len
+    pos = jnp.arange(S, dtype=jnp.int32)
+    epos = jnp.arange(enc.shape[1], dtype=jnp.int32)
+
+    x = params["embed"].astype(jnp.bfloat16)[tokens]
+    x = x + _sinusoid(S, cfg.d_model, x.dtype)[None]
+
+    def body(x, lp):
+        h = L.norm_apply(lp["norm1"], x, cfg)
+        y, (k, v) = L.attention_apply(lp["attn"], h, cfg, q_pos=pos,
+                                      kv_pos=pos, causal=True,
+                                      attn_impl=attn_impl)
+        x = x + y
+        h = L.norm_apply(lp["normx"], x, cfg)
+        y, (xk, xv) = L.attention_apply(lp["xattn"], h, cfg, cross_x=enc,
+                                        q_pos=pos, kv_pos=epos, causal=False,
+                                        attn_impl=attn_impl)
+        x = x + y
+        h = L.norm_apply(lp["norm2"], x, cfg)
+        x = x + L.mlp_apply(lp["mlp"], h, cfg)
+        ck = jnp.zeros((B, W, K, hd), x.dtype).at[:, :S].set(k)
+        cv = jnp.zeros((B, W, K, hd), x.dtype).at[:, :S].set(v)
+        return x, (ck, cv, xk, xv)
+
+    x, (ck, cv, xk, xv) = jax.lax.scan(body, x, params["dec_layers"])
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    cpos = jnp.where(jnp.arange(W) < S, jnp.arange(W), -1).astype(jnp.int32)
+    cache = {"k": ck, "v": cv,
+             "kv_pos": jnp.broadcast_to(cpos, (cfg.n_layers, W)),
+             "xk": xk, "xv": xv, "pos": jnp.int32(S)}
+    from repro.models import lm
+    logits = lm.logits_fn(params, x[:, -1:], cfg)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig, flags=None):
+    """One decoder token against self-cache + cross K/V.  tokens: [B]."""
+    attn_impl = getattr(flags, "attn_impl", "blocked") if flags else "blocked"
+    B = tokens.shape[0]
+    pos = cache["pos"]
+    W = cache["k"].shape[2]
+    x = params["embed"].astype(jnp.bfloat16)[tokens][:, None]
+    x = x + _sinusoid_at(pos, cfg.d_model, x.dtype)
+    epos = jnp.arange(cache["xk"].shape[2], dtype=jnp.int32)
+    K, hd = cfg.n_kv_heads, cfg.hd
+
+    def body(x, inp):
+        lp = inp["p"]
+        h = L.norm_apply(lp["norm1"], x, cfg)
+        kq = (h @ lp["attn"]["wk"].astype(h.dtype)).reshape(B, 1, K, hd)
+        vq = (h @ lp["attn"]["wv"].astype(h.dtype)).reshape(B, 1, K, hd)
+        ck = jax.lax.dynamic_update_slice(inp["ck"], kq, (0, pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(inp["cv"], vq, (0, pos, 0, 0))
+        cpos = jax.lax.dynamic_update_slice(inp["cpos"], pos[None], (pos,))
+        y, _ = L.attention_apply(lp["attn"], h, cfg, kv=(ck, cv),
+                                 q_pos=pos[None], kv_pos=cpos, causal=True,
+                                 kv_valid=cpos >= 0, attn_impl=attn_impl)
+        x = x + y
+        h = L.norm_apply(lp["normx"], x, cfg)
+        y, _ = L.attention_apply(lp["xattn"], h, cfg,
+                                 kv=(inp["xk"], inp["xv"]),
+                                 q_pos=pos[None], kv_pos=epos, causal=False,
+                                 attn_impl=attn_impl)
+        x = x + y
+        h = L.norm_apply(lp["norm2"], x, cfg)
+        x = x + L.mlp_apply(lp["mlp"], h, cfg)
+        return x, (ck, cv, cpos)
+
+    xs = {"p": params["dec_layers"], "ck": cache["k"], "cv": cache["v"],
+          "cpos": cache["kv_pos"], "xk": cache["xk"], "xv": cache["xv"]}
+    x, (ck, cv, cpos) = jax.lax.scan(body, x, xs)
+    from repro.models import lm
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = lm.logits_fn(params, x, cfg)[:, 0]
+    new_cache = dict(cache)
+    new_cache.update(k=ck, v=cv, kv_pos=cpos, pos=pos + 1)
+    return logits, new_cache
+
+
+def _sinusoid_at(pos, d: int, dtype):
+    dim = jnp.arange(d // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32) / jnp.power(10000.0, 2 * dim / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)

@@ -1,0 +1,396 @@
+"""Common transformer layers: norms, RoPE, GQA attention, MLP, MoE.
+
+Pure-function style: ``*_defs(cfg)`` returns the ParamDef tree for a layer,
+``*_apply(params, x, ...)`` runs it.  Attention has three execution paths
+(config ``attn_impl``): ``"blocked"`` (pure-jnp online-softmax flash
+reference — the default; memory-bounded, used for dry-runs and CPU runs),
+``"pallas"`` (the TPU kernel in repro.kernels), and ``"naive"`` (plain
+softmax(QK^T)V for small tests).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------- norms
+
+def norm_defs(cfg: ModelConfig, name: str = "norm"):
+    if cfg.norm_kind == "layer":
+        return {"scale": ParamDef((cfg.d_model,), ("embed",), "ones"),
+                "bias": ParamDef((cfg.d_model,), ("embed",), "zeros")}
+    return {"scale": ParamDef((cfg.d_model,), ("embed",), "ones")}
+
+
+def norm_apply(p, x, cfg: ModelConfig):
+    """Norms keep bf16 tensor I/O; only the reduction statistics are f32.
+
+    The f32-in/f32-out formulation put an f32 [B,S,d] segment in every
+    layer, whose *cotangents* were then reduced/permuted in f32 across the
+    mesh (2x collective wire) and held f32 fusion boundaries (2x HBM) —
+    measured on phi3.5/mixtral, EXPERIMENTS.md §Perf."""
+    if cfg.norm_kind == "layer":
+        xf = x.astype(jnp.float32)
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+        return y.astype(x.dtype)
+    ms = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+    inv = jax.lax.rsqrt(ms + cfg.norm_eps).astype(x.dtype)
+    return x * inv * p["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------- RoPE
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, hd]; positions: [..., S] (broadcastable).
+
+    ``theta == 0`` disables RoPE (archs with absolute positions, whisper).
+    """
+    if not theta:
+        return x
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- attention
+
+def attention_defs(cfg: ModelConfig):
+    d, H, K, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": ParamDef((d, H * hd), ("embed", "hidden")),
+        "wk": ParamDef((d, K * hd), ("embed", "kv_hidden")),
+        "wv": ParamDef((d, K * hd), ("embed", "kv_hidden")),
+        "wo": ParamDef((H * hd, d), ("hidden", "embed")),
+    }
+
+
+def _mask_bias(q_pos, kv_pos, causal: bool, window: int, kv_valid=None):
+    """[Sq, Skv] additive mask (0 or NEG_INF)."""
+    ok = jnp.ones((q_pos.shape[-1], kv_pos.shape[-1]), bool)
+    if causal:
+        ok &= q_pos[:, None] >= kv_pos[None, :]
+    if window:
+        ok &= (q_pos[:, None] - kv_pos[None, :]) < window
+    if kv_valid is not None:
+        ok &= kv_valid[None, :]
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def naive_attention(q, k, v, q_pos, kv_pos, causal, window, kv_valid=None):
+    """q: [B,Sq,H,hd]; k,v: [B,Skv,K,hd].  Reference path."""
+    B, Sq, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    qg = q.reshape(B, Sq, K, G, hd)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    scores += _mask_bias(q_pos, kv_pos, causal, window, kv_valid)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def blocked_attention(q, k, v, q_pos, kv_pos, causal, window,
+                      kv_valid=None, block_kv: int = 1024,
+                      block_q: int = 1024):
+    """Online-softmax attention, tiled over q AND kv blocks (flash ref).
+
+    Memory is O(block_q * block_kv) scores rather than O(Sq * Skv) — the
+    q-tiling matters at scale: an untiled [B,K,G,4096,1024] f32 score
+    block costs 0.8 GB/device on mixtral (EXPERIMENTS.md §Perf iter B1).
+    This is both the jnp oracle structure for the Pallas kernel and the
+    default execution path.
+    """
+    B, Sq, H, hd = q.shape
+    if Sq > block_q:
+        nq = -(-Sq // block_q)
+        pad = nq * block_q - Sq
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            q_pos = jnp.pad(q_pos, (0, pad), constant_values=2**30)
+        qb = q.reshape(B, nq, block_q, H, hd).transpose(1, 0, 2, 3, 4)
+        pb = q_pos.reshape(nq, block_q)
+        out = jax.lax.map(
+            lambda args: blocked_attention(
+                args[0], k, v, args[1], kv_pos, causal, window,
+                kv_valid, block_kv=block_kv, block_q=block_q),
+            (qb, pb))
+        out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * block_q, H, hd)
+        return out[:, :Sq]
+    Skv, K = k.shape[1], k.shape[2]
+    G = H // K
+    if Skv <= block_kv:
+        return naive_attention(q, k, v, q_pos, kv_pos, causal, window,
+                               kv_valid)
+    nblk = -(-Skv // block_kv)
+    pad = nblk * block_kv - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, (0, pad), constant_values=2**30)
+        kv_valid = (jnp.pad(kv_valid, (0, pad))
+                    if kv_valid is not None
+                    else jnp.pad(jnp.ones((Skv,), bool), (0, pad)))
+    kb = k.reshape(B, nblk, block_kv, K, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block_kv, K, hd).transpose(1, 0, 2, 3, 4)
+    pb = kv_pos.reshape(nblk, block_kv)
+    valb = (kv_valid.reshape(nblk, block_kv)
+            if kv_valid is not None else None)
+
+    qg = q.reshape(B, Sq, K, G, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+
+    def body(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, pblk, vlblk = blk
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, kblk.astype(jnp.float32))
+        s = s * scale + _mask_bias(q_pos, pblk, causal, window, vlblk)
+        m_new = jnp.maximum(m, jnp.max(s, -1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, -1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p, vblk.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, K, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, K, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, K, G, Sq, hd), jnp.float32)
+    xs = (kb, vb, pb,
+          valb if valb is not None else jnp.ones((nblk, block_kv), bool))
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+    return out.astype(q.dtype)
+
+
+def attention_apply(p, x, cfg: ModelConfig, *, kv=None, q_pos, kv_pos,
+                    causal=True, window=0, kv_valid=None,
+                    attn_impl: str = "blocked", cross_x=None):
+    """Full attention sub-layer: projections + RoPE + core + output proj.
+
+    ``kv``: optional (k_cache, v_cache) already projected+rotated (decode).
+    ``cross_x``: encoder outputs for cross-attention (no RoPE, not causal).
+    Returns (out, (k, v)) where (k, v) are this call's projected keys and
+    values (for cache updates).
+    """
+    B = x.shape[0]
+    H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, -1, H, hd)
+    src = cross_x if cross_x is not None else x
+    if kv is None:
+        k = (src @ p["wk"].astype(x.dtype)).reshape(B, -1, K, hd)
+        v = (src @ p["wv"].astype(x.dtype)).reshape(B, -1, K, hd)
+        if cross_x is None:
+            k = rope(k, kv_pos[None], cfg.rope_theta)
+    else:
+        k, v = kv
+    if cross_x is None:
+        q = rope(q, q_pos[None], cfg.rope_theta)
+    q = shd.shard(q, "batch", None, "heads", None)
+    k = shd.shard(k, "batch", None, "kv_heads", None)
+    v = shd.shard(v, "batch", None, "kv_heads", None)
+
+    if attn_impl == "naive":
+        out = naive_attention(q, k, v, q_pos, kv_pos, causal, window,
+                              kv_valid)
+    elif attn_impl == "pallas":
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(q, k, v, q_pos=q_pos, kv_pos=kv_pos,
+                                     causal=causal, window=window,
+                                     kv_valid=kv_valid)
+    else:
+        out = blocked_attention(q, k, v, q_pos, kv_pos, causal, window,
+                                kv_valid)
+    y = out.reshape(B, -1, H * hd) @ p["wo"].astype(x.dtype)
+    return y, (k, v)
+
+
+def split_kv_decode_attention(q, ck, cv, cpos, q_pos, window, n_splits):
+    """Flash-decoding: partial softmax per KV-cache split, then a cheap
+    log-sum-exp combine.  With the split dim sharded over the model axis,
+    each device reads only its own cache shard (6.7 GB vs 59 GB/step on
+    phi3-medium decode_32k — EXPERIMENTS.md §Perf iteration C1); only the
+    [B, ns, H] stats and [B, ns, H, hd] partials cross the interconnect.
+
+    q: [B,1,H,hd] (post-RoPE); ck/cv: [B,W,K,hd]; cpos: [W].
+    """
+    B, W, K, hd = ck.shape
+    H = q.shape[2]
+    G = H // K
+    ns = n_splits if W % n_splits == 0 else 1
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    cks = ck.reshape(B, ns, W // ns, K, hd)
+    cvs = cv.reshape(B, ns, W // ns, K, hd)
+    cks = shd.shard(cks, "batch", "kv_split", None, None, None)
+    cvs = shd.shard(cvs, "batch", "kv_split", None, None, None)
+    ps = cpos.reshape(ns, W // ns)
+
+    s = jnp.einsum("bkgh,bnwkh->bnkgw", qg, cks.astype(jnp.float32))
+    s = s / math.sqrt(hd)
+    ok = (ps >= 0) & (ps <= q_pos[0])
+    if window:
+        ok &= (q_pos[0] - ps) < window
+    s = jnp.where(ok[None, :, None, None, :], s, NEG_INF)
+    m = jnp.max(s, -1)                                   # [B,ns,K,G]
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, -1)
+    acc = jnp.einsum("bnkgw,bnwkh->bnkgh", p, cvs.astype(jnp.float32))
+    acc = shd.shard(acc, "batch", "kv_split", None, None, None)
+    # combine across splits (tiny: ns x stats)
+    M = jnp.max(m, 1, keepdims=True)
+    w = jnp.exp(m - M)
+    y = jnp.sum(acc * w[..., None], 1) / jnp.maximum(
+        jnp.sum(l * w, 1), 1e-30)[..., None]
+    return y.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+# ----------------------------------------------------------------------- MLP
+
+def mlp_defs(cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    if cfg.act == "silu":  # SwiGLU
+        return {"wi": ParamDef((d, 2 * f), ("embed", "hidden")),
+                "wo": ParamDef((f, d), ("hidden", "embed"))}
+    return {"wi": ParamDef((d, f), ("embed", "hidden")),
+            "wo": ParamDef((f, d), ("hidden", "embed"))}
+
+
+def mlp_apply(p, x, cfg: ModelConfig):
+    h = x @ p["wi"].astype(x.dtype)
+    if cfg.act == "silu":
+        g, u = jnp.split(h, 2, axis=-1)
+        h = jax.nn.silu(g) * u
+    else:
+        h = jax.nn.gelu(h)
+    h = shd.shard(h, "batch", None, "hidden")
+    return h @ p["wo"].astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- MoE
+
+def moe_defs(cfg: ModelConfig):
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamDef((d, E), ("embed", None)),
+        "wi": ParamDef((E, d, 2 * f), ("experts", "embed", "expert_hidden")),
+        "wo": ParamDef((E, f, d), ("experts", "expert_hidden", "embed")),
+    }
+
+
+def moe_apply(p, x, cfg: ModelConfig):
+    """Token-choice top-k MoE, capacity-bounded, *per-row* dispatch.
+
+    The dispatch group is one batch row (S tokens): positions-in-expert
+    come from a cumsum along the row only, so dispatch is fully local to
+    the row's data-parallel shard — no global [T*k] cumsum, no globally-
+    sized [E, C_global, d] buffer replicated per device (which is what a
+    naive GShard dispatch lowers to under GSPMD; measured 32 GB/device on
+    mixtral before this change — see EXPERIMENTS.md §Perf).  Tokens beyond
+    a row's per-expert capacity are dropped (residual passes through).
+    """
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+
+    logits = (x @ p["router"].astype(x.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)                 # [B, S, E]
+    gate, eidx = jax.lax.top_k(probs, k)               # [B, S, k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    cap = int(cfg.capacity_factor * k * S / E + 0.5)
+    cap = max(8, -(-cap // 8) * 8)
+
+    # position of each (token, slot) within its expert, along the row
+    onehot = jax.nn.one_hot(eidx, E, dtype=jnp.int32)  # [B, S, k, E]
+    flat = onehot.reshape(B, S * k, E)
+    pos = jnp.cumsum(flat, 1) - flat                   # [B, S*k, E]
+    pos = jnp.take_along_axis(pos, eidx.reshape(B, S * k, 1), 2)
+    pos = pos.reshape(B, S, k)
+    keep = pos < cap
+
+    e_flat = eidx.reshape(B, S * k)
+    pos_flat = jnp.where(keep, pos, cap).reshape(B, S * k)
+    tok_idx = jnp.repeat(jnp.arange(S), k)
+
+    # vmap'd per-row scatter/gather: the batch dim becomes a true scatter
+    # batch dimension, which GSPMD partitions cleanly over data — the
+    # fused 3-d advanced-indexing form fell back to a *replicated* scatter
+    # (all-gather + all-reduce of activation-sized f32 per layer; measured
+    # ~500 GB/device/step on phi3.5 — EXPERIMENTS.md §Perf).
+    def row_scatter(xr, er, pr):
+        buf = jnp.zeros((E, cap + 1, d), x.dtype)
+        return buf.at[er, pr].add(xr[tok_idx])
+
+    buf = jax.vmap(row_scatter)(x, e_flat, pos_flat)
+    buf = shd.shard(buf[:, :, :cap], "batch", "experts", None, None)
+
+    # Re-gather the FSDP-sharded expert weights before the einsums: stored
+    # layout spreads experts/d over data for capacity, but at *use* the
+    # only sharded dim may be the expert-hidden (TP) dim — any sharding on
+    # the contraction (d) or expert dim makes GSPMD resolve the conflict
+    # with per-token partial-sum all-reduces / all-to-alls (measured
+    # 4 TB/device/step on mixtral, 7 TB on phi3.5 — EXPERIMENTS.md §Perf);
+    # an explicit bf16 weight all-gather is ~10x cheaper.
+    wi = shd.shard(p["wi"].astype(x.dtype), None, None, "expert_hidden")
+    wo = shd.shard(p["wo"].astype(x.dtype), None, "expert_hidden", None)
+
+    # preferred_element_type pins the dot *output* to bf16 so the
+    # row-parallel TP all-reduce of the second einsum travels in bf16
+    # (the XLA CPU backend otherwise keeps the f32 accumulator on the
+    # wire: 2x collective bytes — §Perf iteration B4; TPU MXU still
+    # accumulates in f32 internally).
+    h = jnp.einsum("becd,edf->becf", buf, wi,
+                   preferred_element_type=jnp.bfloat16)
+    g, u = jnp.split(h, 2, axis=-1)
+    h = jax.nn.silu(g) * u
+    h = shd.shard(h, "batch", "experts", None, "expert_hidden")
+    out = jnp.einsum("becf,efd->becd", h, wo,
+                     preferred_element_type=jnp.bfloat16)
+
+    # Combine by *forward* scatter-add into token order (backward = plain
+    # gather).  The gather-forward formulation paid its scatter-add on the
+    # backward pass, where the f32-promoted cotangent chain inflated the
+    # TP all-reduces 2x (EXPERIMENTS.md §Perf iteration B3).
+    gate_slot = gate.reshape(B, S * k) * keep.reshape(B, S * k)
+
+    def row_combine(out_r, er, pr, gr):
+        # out_r [E, cap, d]; er/pr/gr [S*k]; dropped slots hit column cap
+        wt = jnp.zeros((E, cap + 1), jnp.float32).at[er, pr].set(gr)
+        tok = jnp.full((E, cap + 1), S, jnp.int32).at[er, pr].set(tok_idx)
+        contrib = out_r * wt[:, :cap, None].astype(out_r.dtype)
+        y = jnp.zeros((S + 1, d), out_r.dtype)
+        y = y.at[tok[:, :cap].reshape(-1)].add(contrib.reshape(-1, d))
+        return y[:S]
+
+    y = jax.vmap(row_combine)(out, e_flat,
+                              jnp.where(keep.reshape(B, S * k), pos_flat,
+                                        cap),
+                              gate_slot)
+    return y, _aux_loss(probs.reshape(-1, E), eidx.reshape(-1, k), E)
+
+
+def _aux_loss(probs, eidx, E):
+    """Load-balancing auxiliary loss (Switch-style)."""
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(eidx[:, 0], E, dtype=jnp.float32), axis=0)
+    return E * jnp.sum(me * ce)

@@ -1,0 +1,462 @@
+"""Unified decoder-only LM covering the dense / moe / ssm / hybrid families.
+
+* Layers are stacked along a leading ``layers`` axis and executed with
+  ``lax.scan`` (+ optional ``jax.checkpoint``), so HLO size is O(1) in
+  depth — a 88-layer granite compiles as fast as a 2-layer smoke model.
+* Hybrid architectures (recurrentgemma) carry a union parameter set per
+  layer and select the temporal mixer (RG-LRU vs local attention) with
+  ``lax.cond`` on a static per-layer type vector.
+* Decode uses ring-buffer KV caches: full-length for global attention,
+  window-length for SWA/local attention (this is what makes the
+  ``long_500k`` cell bounded for mixtral/recurrentgemma), and recurrent
+  state for SSM/RG-LRU layers.  Cache slot validity/positions are tracked
+  explicitly so one attention implementation serves all cases.
+* Vision (pixtral) consumes stub patch embeddings as a sequence prefix;
+  see DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.models import layers as L
+from repro.models import rglru as R
+from repro.models import ssm as S
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef, init_params, abstract_params
+
+
+@dataclasses.dataclass(frozen=True)
+class RunFlags:
+    """Execution knobs (static)."""
+    attn_impl: str = "blocked"   # blocked | naive | pallas
+    ssm_impl: str = "xla"        # xla | pallas
+    remat: str = "layer"         # layer | none
+    block_kv: int = 1024
+
+
+def _stack(defs, n: int):
+    """Add a leading stacked-layers dim to every ParamDef in a tree."""
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init,
+                           d.scale),
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def layer_types(cfg: ModelConfig) -> tuple:
+    """Static per-layer mixer type: 'attn' | 'rec' | 'ssm'."""
+    if cfg.family == "ssm":
+        return ("ssm",) * cfg.n_layers
+    if cfg.family == "hybrid":
+        pat = cfg.layer_pattern or ("rec",)
+        return tuple(pat[i % len(pat)] for i in range(cfg.n_layers))
+    return ("attn",) * cfg.n_layers
+
+
+def lm_defs(cfg: ModelConfig):
+    """Full model ParamDef tree."""
+    d, v = cfg.d_model, cfg.vocab_padded
+    types = set(layer_types(cfg))
+    layer: dict[str, Any] = {"norm1": L.norm_defs(cfg)}
+    if "attn" in types:
+        layer["attn"] = L.attention_defs(cfg)
+    if "rec" in types:
+        layer["rec"] = R.rglru_defs(cfg)
+    if "ssm" in types:
+        layer["ssm"] = S.ssm_defs(cfg)
+    if cfg.family != "ssm":
+        layer["norm2"] = L.norm_defs(cfg)
+        layer["moe" if cfg.family == "moe" else "mlp"] = (
+            L.moe_defs(cfg) if cfg.family == "moe" else L.mlp_defs(cfg))
+    out = {
+        "embed": ParamDef((v, d), ("vocab", "embed"), scale=1.0),
+        "layers": _stack(layer, cfg.n_layers),
+        "final_norm": L.norm_defs(cfg),
+    }
+    if not cfg.tie_embeddings:
+        out["head"] = ParamDef((d, v), ("embed", "vocab"))
+    return out
+
+
+def _ltype_vec(cfg: ModelConfig):
+    order = ("attn", "rec", "ssm")
+    return jnp.asarray([order.index(t) for t in layer_types(cfg)], jnp.int32)
+
+
+def _attn_window(cfg: ModelConfig) -> int:
+    if cfg.family == "hybrid":
+        return cfg.local_window
+    return cfg.attn_window
+
+
+def _mixer_train(p, x, cfg: ModelConfig, flags: RunFlags, ltype, q_pos):
+    """Temporal mixer for full-sequence passes (train/prefill trunk)."""
+    window = _attn_window(cfg)
+
+    def attn_branch(x):
+        y, _ = L.attention_apply(
+            p.get("attn", p), x, cfg, q_pos=q_pos, kv_pos=q_pos,
+            causal=True, window=window, attn_impl=flags.attn_impl)
+        return y
+
+    if cfg.family == "hybrid":
+        def rec_branch(x):
+            return R.rglru_block_apply(p["rec"], x, cfg)
+        return jax.lax.cond(ltype == 0, attn_branch, rec_branch, x)
+    if cfg.family == "ssm":
+        return S.ssm_block_apply(p["ssm"], x, cfg, ssm_impl=flags.ssm_impl)
+    return attn_branch(x)
+
+
+def forward(params, tokens, cfg: ModelConfig, flags: RunFlags = RunFlags(),
+            prefix_embeds=None):
+    """Trunk forward.  tokens: [B, S_tok]; prefix_embeds: [B, P, d] stub
+    frontend output (vision/audio), prepended to the token embeddings.
+    Returns hidden states [B, S, d] and the aux-loss scalar (MoE)."""
+    emb = params["embed"]
+    x = emb.astype(jnp.bfloat16)[tokens]
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = shd.shard(x, "batch", "seq", None)
+    Sq = x.shape[1]
+    q_pos = jnp.arange(Sq, dtype=jnp.int32)
+    ltv = _ltype_vec(cfg)
+
+    def layer_body(carry, inp):
+        x, aux = carry
+        lp, lt = inp
+        h = L.norm_apply(lp["norm1"], x, cfg)
+        h = _mixer_train(lp, h, cfg, flags, lt, q_pos)
+        x = x + h
+        if cfg.family != "ssm":
+            h = L.norm_apply(lp["norm2"], x, cfg)
+            if cfg.family == "moe":
+                h, a = L.moe_apply(lp["moe"], h, cfg)
+                aux = aux + a
+            else:
+                h = L.mlp_apply(lp["mlp"], h, cfg)
+            x = x + h
+        x = shd.shard(x, "batch", "seq", None)
+        return (x, aux), None
+
+    body = layer_body
+    if flags.remat == "layer":
+        body = jax.checkpoint(layer_body)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.float32(0.0)), (params["layers"],
+                                                             ltv))
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    return x, aux
+
+
+@jax.custom_vjp
+def grad_cast_bf16(x):
+    """Identity whose cotangent is cast to bf16.
+
+    The f32 cross-entropy produces f32 cotangents which would otherwise
+    propagate through the *entire* trunk backward pass (f32 dots, 2x HBM
+    traffic — measured via the HLO roofline; see EXPERIMENTS.md §Perf)."""
+    return x
+
+
+def _gc_fwd(x):
+    return x, None
+
+
+def _gc_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype),)
+
+
+grad_cast_bf16.defvjp(_gc_fwd, _gc_bwd)
+
+
+def logits_fn(params, x, cfg: ModelConfig):
+    head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = x @ head.astype(x.dtype)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.vocab_padded) >= cfg.vocab_size
+        logits = logits + jnp.where(pad_mask, -1e30, 0.0).astype(logits.dtype)
+    return shd.shard(logits, "batch", "seq", "vocab")
+
+
+def chunked_ce(params, x, targets, mask, cfg: ModelConfig,
+               chunk: int = 1024):
+    """Cross entropy over sequence chunks: the [B, S, vocab] logits tensor
+    is never materialized (each chunk's logits are recomputed in backward
+    via jax.checkpoint) — the standard large-vocab memory fix."""
+    B, S, _ = x.shape
+    x = grad_cast_bf16(x)
+    nchunk = max(1, -(-S // chunk))
+    pad = nchunk * chunk - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    xs = (x.reshape(B, nchunk, chunk, -1).transpose(1, 0, 2, 3),
+          targets.reshape(B, nchunk, chunk).transpose(1, 0, 2),
+          mask.reshape(B, nchunk, chunk).transpose(1, 0, 2))
+
+    @jax.checkpoint
+    def chunk_loss(carry, inp):
+        xc, tc, mc = inp
+        logits = logits_fn(params, xc, cfg).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, tc[..., None], -1)[..., 0]
+        nll = (logz - gold) * mc
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mc)), None
+
+    (nll_sum, n_tok), _ = jax.lax.scan(
+        chunk_loss, (jnp.float32(0.0), jnp.float32(0.0)), xs)
+    return nll_sum / jnp.maximum(n_tok, 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, flags: RunFlags = RunFlags()):
+    """Causal-LM cross entropy (+ MoE aux loss).  batch keys: tokens,
+    targets, (mask), (prefix_embeds)."""
+    x, aux = forward(params, batch["tokens"], cfg, flags,
+                     prefix_embeds=batch.get("prefix_embeds"))
+    n_prefix = 0
+    if batch.get("prefix_embeds") is not None:
+        n_prefix = batch["prefix_embeds"].shape[1]
+        x = x[:, n_prefix:]
+    targets = batch["targets"]
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones(targets.shape, jnp.float32)
+    loss = chunked_ce(params, x, targets, mask, cfg)
+    return loss + 0.01 * aux, {"nll": loss, "aux": aux}
+
+
+# ------------------------------------------------------------------ serving
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> dict:
+    """Decode cache.  Attention layers get a ring buffer whose length is
+    min(max_len, window or inf); recurrent/ssm layers get their state."""
+    nl = cfg.n_layers
+    window = _attn_window(cfg)
+    W = min(max_len, window) if window else max_len
+    cache: dict[str, Any] = {"pos": jnp.int32(0)}
+    types = set(layer_types(cfg))
+    if "attn" in types:
+        K, hd = cfg.n_kv_heads, cfg.hd
+        cache["k"] = jnp.zeros((nl, batch, W, K, hd), dtype)
+        cache["v"] = jnp.zeros((nl, batch, W, K, hd), dtype)
+        cache["kv_pos"] = jnp.full((nl, W), -1, jnp.int32)
+    if "rec" in types:
+        st = R.rglru_init_state(cfg, batch, dtype)
+        cache["rec"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (nl,) + a.shape), st)
+    if "ssm" in types:
+        st = S.ssm_init_state(cfg, batch, dtype)
+        cache["ssm"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (nl,) + a.shape), st)
+    return cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int,
+            flags: RunFlags = RunFlags(), prefix_embeds=None):
+    """Run the prompt through the trunk and build the decode cache — one
+    scan over layers producing hidden states, ring-buffer KV caches (last
+    W positions for SWA/local windows) and *exact* recurrent states.
+    Returns (logits_last [B, V], cache)."""
+    emb = params["embed"]
+    x0 = emb.astype(jnp.bfloat16)[tokens]
+    if prefix_embeds is not None:
+        x0 = jnp.concatenate([prefix_embeds.astype(x0.dtype), x0], 1)
+    B, Sq = x0.shape[0], x0.shape[1]
+    cache = init_cache(cfg, B, max_len)
+    cache["pos"] = jnp.int32(Sq)
+    q_pos = jnp.arange(Sq, dtype=jnp.int32)
+    ltv = _ltype_vec(cfg)
+    window = _attn_window(cfg)
+    has_attn = "k" in cache
+    W = cache["k"].shape[2] if has_attn else 0
+    K, hd = cfg.n_kv_heads, cfg.hd
+
+    def ring_pack(k, v):
+        """Keep the last min(W, Sq) positions in ring order."""
+        take = min(W, Sq)
+        pos = q_pos[Sq - take:]
+        slots = jnp.mod(pos, W)
+        ck = jnp.zeros((B, W, K, hd), k.dtype).at[:, slots].set(
+            k[:, Sq - take:])
+        cv = jnp.zeros((B, W, K, hd), v.dtype).at[:, slots].set(
+            v[:, Sq - take:])
+        cpos = jnp.full((W,), -1, jnp.int32).at[slots].set(pos)
+        return ck, cv, cpos
+
+    def zero_kv():
+        return (jnp.zeros((B, W, K, hd), x0.dtype),
+                jnp.zeros((B, W, K, hd), x0.dtype),
+                jnp.full((W,), -1, jnp.int32))
+
+    def body(x, inp):
+        lp, lt = inp
+        h = L.norm_apply(lp["norm1"], x, cfg)
+        outs = {}
+        if cfg.family == "ssm":
+            y, st = S.ssm_block_apply(lp["ssm"], h, cfg,
+                                      ssm_impl=flags.ssm_impl,
+                                      return_state=True)
+            outs["ssm"] = st
+        elif cfg.family == "hybrid":
+            def attn_b(h):
+                y, (k, v) = L.attention_apply(
+                    lp["attn"], h, cfg, q_pos=q_pos, kv_pos=q_pos,
+                    causal=True, window=window, attn_impl=flags.attn_impl)
+                return y, ring_pack(k, v), R.rglru_init_state(cfg, B,
+                                                              x0.dtype)
+            def rec_b(h):
+                y, st = R.rglru_block_apply(lp["rec"], h, cfg,
+                                            return_state=True)
+                return y, zero_kv(), st
+            y, kv, st = jax.lax.cond(lt == 0, attn_b, rec_b, h)
+            outs["kv"] = kv
+            outs["rec"] = st
+        else:
+            y, (k, v) = L.attention_apply(
+                lp["attn"], h, cfg, q_pos=q_pos, kv_pos=q_pos,
+                causal=True, window=window, attn_impl=flags.attn_impl)
+            outs["kv"] = ring_pack(k, v)
+        x = x + y
+        if cfg.family != "ssm":
+            h2 = L.norm_apply(lp["norm2"], x, cfg)
+            if cfg.family == "moe":
+                h2, _ = L.moe_apply(lp["moe"], h2, cfg)
+            else:
+                h2 = L.mlp_apply(lp["mlp"], h2, cfg)
+            x = x + h2
+        x = shd.shard(x, "batch", "seq", None)
+        return x, outs
+
+    x, outs = jax.lax.scan(body, x0, (params["layers"], ltv))
+    if has_attn:
+        cache["k"], cache["v"], cache["kv_pos"] = outs["kv"]
+    if "rec" in cache:
+        cache["rec"] = outs["rec"]
+    if "ssm" in cache:
+        cache["ssm"] = outs["ssm"]
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = logits_fn(params, x[:, -1:], cfg)[:, 0]
+    return logits, cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig,
+                flags: RunFlags = RunFlags()):
+    """One decode step.  tokens: [B] int32.  Returns (logits [B, V],
+    new cache).  This is what the ``decode_32k`` / ``long_500k`` cells
+    lower as ``serve_step``."""
+    B = tokens.shape[0]
+    emb = params["embed"]
+    x = emb.astype(jnp.bfloat16)[tokens][:, None, :]   # [B, 1, d]
+    x = shd.shard(x, "batch", None, None)
+    pos = cache["pos"]
+    q_pos = pos[None]
+    ltv = _ltype_vec(cfg)
+    window = _attn_window(cfg)
+
+    has_attn = "k" in cache
+    has_rec = "rec" in cache
+    has_ssm = "ssm" in cache
+    W = cache["k"].shape[2] if has_attn else 0
+
+    def body(x, inp):
+        lp = inp["p"]
+        lt = inp["t"]
+
+        h = L.norm_apply(lp["norm1"], x, cfg)
+        outs = {}
+        if has_ssm:
+            y, st = S.ssm_decode_step(lp["ssm"], h, inp["ssm"], cfg)
+            outs["ssm"] = st
+        elif cfg.family == "hybrid":
+            def attn_b(h):
+                y, kv = _cached_attention(lp["attn"], h, inp, cfg, flags,
+                                          pos, window, W)
+                return y, kv, inp["rec"]
+            def rec_b(h):
+                y, st = R.rglru_decode_step(lp["rec"], h, inp["rec"], cfg)
+                return y, (inp["ck"], inp["cv"], inp["cpos"]), st
+            y, kv, st = jax.lax.cond(lt == 0, attn_b, rec_b, h)
+            outs["kv"] = kv
+            outs["rec"] = st
+        else:
+            y, kv = _cached_attention(lp["attn"], h, inp, cfg, flags, pos,
+                                      window, W)
+            outs["kv"] = kv
+        x = x + y
+        if cfg.family != "ssm":
+            h2 = L.norm_apply(lp["norm2"], x, cfg)
+            if cfg.family == "moe":
+                h2, _ = L.moe_apply(lp["moe"], h2, cfg)
+            else:
+                h2 = L.mlp_apply(lp["mlp"], h2, cfg)
+            x = x + h2
+        return x, outs
+
+    xs = {"p": params["layers"], "t": ltv}
+    if has_attn:
+        xs["ck"], xs["cv"], xs["cpos"] = cache["k"], cache["v"], cache["kv_pos"]
+    if has_rec:
+        xs["rec"] = cache["rec"]
+    if has_ssm:
+        xs["ssm"] = cache["ssm"]
+
+    x, outs = jax.lax.scan(body, x, xs)
+    new_cache = dict(cache)
+    new_cache["pos"] = pos + 1
+    if has_attn:
+        new_cache["k"] = outs["kv"][0]
+        new_cache["v"] = outs["kv"][1]
+        new_cache["kv_pos"] = outs["kv"][2]
+    if has_rec:
+        new_cache["rec"] = outs["rec"]
+    if has_ssm:
+        new_cache["ssm"] = outs["ssm"]
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    logits = logits_fn(params, x, cfg)[:, 0]
+    return logits, new_cache
+
+
+def _cached_attention(p, h, inp, cfg, flags, pos, window, W):
+    """Decode attention against the ring-buffer cache of one layer."""
+    B = h.shape[0]
+    K, hd = cfg.n_kv_heads, cfg.hd
+    kq = (h @ p["wk"].astype(h.dtype)).reshape(B, 1, K, hd)
+    vq = (h @ p["wv"].astype(h.dtype)).reshape(B, 1, K, hd)
+    kq = L.rope(kq, pos[None, None], cfg.rope_theta)
+    slot = jnp.mod(pos, W)
+    ck = jax.lax.dynamic_update_slice(inp["ck"], kq,
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(inp["cv"], vq,
+                                      (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(inp["cpos"], pos[None], (slot,))
+    kv_valid = cpos >= 0
+    if flags.attn_impl == "pallas":
+        from repro.kernels.paged_attention import ops as pa_ops
+        out = pa_ops.decode_attention(
+            (h @ p["wq"].astype(h.dtype)).reshape(B, 1, cfg.n_heads, hd),
+            ck, cv, q_pos=pos[None], kv_pos=cpos, window=window,
+            kv_valid=kv_valid, rope_theta=cfg.rope_theta)
+        y = out.reshape(B, 1, cfg.n_heads * hd) @ p["wo"].astype(h.dtype)
+        return y, (ck, cv, cpos)
+    # split-KV (flash-decoding) path: partials per cache shard + LSE
+    # combine; the split count follows the mesh's model-axis size so each
+    # device touches only its local cache shard (§Perf iteration C1).
+    from repro import sharding as shd_mod
+    mesh = shd_mod.get_mesh()
+    ns = int(mesh.shape.get("model", 1)) if mesh is not None else 1
+    B = h.shape[0]
+    q = (h @ p["wq"].astype(h.dtype)).reshape(B, 1, cfg.n_heads, cfg.hd)
+    q = L.rope(q, pos[None, None], cfg.rope_theta)
+    cpos_eff = jnp.where(kv_valid, cpos, -1)
+    out = L.split_kv_decode_attention(q, ck, cv, cpos_eff, pos[None],
+                                      window, ns)
+    y = out.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"].astype(h.dtype)
+    return y, (ck, cv, cpos)

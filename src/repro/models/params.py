@@ -1,0 +1,90 @@
+"""Declarative parameter trees: shapes + logical axes + init in one place.
+
+A model is declared as a pytree of ``ParamDef``s; from the same declaration
+we derive (a) materialized parameters, (b) abstract ShapeDtypeStructs for
+the dry-run, and (c) NamedShardings via the logical-axis rules — so shapes,
+sharding, and initialization can never drift apart.
+"""
+
+from __future__ import annotations
+
+import zlib
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+
+
+class ParamDef(NamedTuple):
+    shape: tuple
+    axes: tuple                 # logical axis names (len == len(shape))
+    init: str = "normal"        # normal | zeros | ones
+    scale: float = 1.0          # multiplier on the fan-in-scaled std
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _leaf_paths(tree):
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_def)
+
+
+def init_params(defs, key, dtype=jnp.float32):
+    """Materialize a ParamDef tree; per-leaf keys are path-derived so the
+    result is independent of traversal order."""
+    leaves, treedef = _leaf_paths(defs)
+
+    def init_one(path, d: ParamDef):
+        assert len(d.shape) == len(d.axes), (path, d)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        # crc32, not hash(): python string hashing is salted per process
+        path_id = zlib.crc32(jax.tree_util.keystr(path).encode()) & 0x7FFFFFFF
+        k = jax.random.fold_in(key, path_id)
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        std = d.scale / max(fan_in, 1) ** 0.5
+        return (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+
+    out = [init_one(p, d) for p, d in leaves]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree (with shardings if a mesh is active) — used by
+    the dry-run so full-size parameters are never allocated."""
+    def one(d: ParamDef):
+        sh = shd.named_sharding(d.axes, d.shape)
+        if sh is None:
+            return jax.ShapeDtypeStruct(d.shape, dtype)
+        return jax.ShapeDtypeStruct(d.shape, dtype, sharding=sh)
+    return jax.tree_util.tree_map(one, defs, is_leaf=is_def)
+
+
+def param_shardings(defs, mesh=None):
+    """NamedSharding tree for in_shardings= (None entries if no mesh)."""
+    return jax.tree_util.tree_map(
+        lambda d: shd.named_sharding(d.axes, d.shape, mesh),
+        defs, is_leaf=is_def)
+
+
+def param_specs(defs, mesh=None):
+    """PartitionSpec tree."""
+    return jax.tree_util.tree_map(
+        lambda d: shd.spec_for(d.axes, d.shape, mesh),
+        defs, is_leaf=is_def)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree_util.tree_leaves(defs, is_leaf=is_def)
+    total = 0
+    for d in leaves:
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total

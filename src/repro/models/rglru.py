@@ -1,0 +1,119 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin architecture).
+
+The recurrent block: linear branch + GeLU gate branch, a short causal
+conv1d, and the Real-Gated Linear Recurrent Unit
+
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(c * softplus(Lambda) * r_t * log(a_base))  ~ a^(c r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+computed with the same chunked-scan discipline as the SSM block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+_C = 8.0  # Griffin's fixed gate temperature
+
+
+def rglru_defs(cfg: ModelConfig):
+    d = cfg.d_model
+    return {
+        "in_x": ParamDef((d, d), ("embed", "hidden")),
+        "in_gate": ParamDef((d, d), ("embed", "hidden")),
+        "conv_w": ParamDef((cfg.ssm_conv or 4, d), ("state", "hidden")),
+        "conv_b": ParamDef((d,), ("hidden",), "zeros"),
+        "w_r": ParamDef((d, d), ("hidden", "hidden")),
+        "w_i": ParamDef((d, d), ("hidden", "hidden")),
+        "lam": ParamDef((d,), ("hidden",), "ones"),
+        "out": ParamDef((d, d), ("hidden", "embed")),
+    }
+
+
+def _gates(p, u):
+    r = jax.nn.sigmoid(u @ p["w_r"].astype(u.dtype))
+    i = jax.nn.sigmoid(u @ p["w_i"].astype(u.dtype))
+    log_a = (-_C * jax.nn.softplus(p["lam"].astype(jnp.float32))
+             * r.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = (i * u).astype(jnp.float32) * jnp.sqrt(
+        jnp.maximum(1.0 - a * a, 1e-9))
+    return a, gated
+
+
+def _conv(p, u, kc, conv_state=None):
+    w = p["conv_w"].astype(u.dtype)
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], kc - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(kc))
+    new_state = up[:, -(kc - 1):] if kc > 1 else pad
+    return out + p["conv_b"].astype(u.dtype), new_state
+
+
+def rglru_block_apply(p, x, cfg: ModelConfig, chunk: int = 256,
+                      return_state: bool = False):
+    """x: [B, S, d] -> [B, S, d] (optionally also the exact decode state)."""
+    B, S, d = x.shape
+    kc = cfg.ssm_conv or 4
+    u_pre = x @ p["in_x"].astype(x.dtype)
+    gate = jax.nn.gelu(x @ p["in_gate"].astype(x.dtype))
+    u, _ = _conv(p, u_pre, kc)
+    a, gated = _gates(p, u)
+
+    nchunk = -(-S // chunk)
+    pad = nchunk * chunk - S
+    if pad:
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)), constant_values=1.0)
+        gated = jnp.pad(gated, ((0, 0), (0, pad), (0, 0)))
+
+    def chunk_body(h, inp):
+        ac, gc = inp
+
+        def step(hh, ig):
+            aa, gg = ig
+            hh = aa.astype(jnp.float32) * hh + gg
+            return hh, hh
+        h, ys = jax.lax.scan(step, h,
+                             (ac.transpose(1, 0, 2), gc.transpose(1, 0, 2)))
+        return h, ys.transpose(1, 0, 2)
+
+    xs = (a.reshape(B, nchunk, chunk, d).transpose(1, 0, 2, 3),
+          gated.reshape(B, nchunk, chunk, d).transpose(1, 0, 2, 3))
+    h0 = jnp.zeros((B, d), jnp.float32)
+    hN, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    h_seq = ys.transpose(1, 0, 2, 3).reshape(B, nchunk * chunk, d)[:, :S]
+    y = h_seq.astype(x.dtype) * gate
+    out = y @ p["out"].astype(x.dtype)
+    if return_state:
+        state = {"conv": u_pre[:, S - (kc - 1):] if kc > 1
+                 else jnp.zeros((B, 0, d), x.dtype),
+                 "h": hN}
+        return out, state
+    return out
+
+
+def rglru_decode_step(p, x, state, cfg: ModelConfig):
+    """x: [B,1,d]; state: dict(conv [B,kc-1,d], h [B,d])."""
+    kc = cfg.ssm_conv or 4
+    u = x @ p["in_x"].astype(x.dtype)
+    gate = jax.nn.gelu(x @ p["in_gate"].astype(x.dtype))
+    u, conv_state = _conv(p, u, kc, conv_state=state["conv"])
+    a, gated = _gates(p, u)
+    h = a[:, 0].astype(jnp.float32) * state["h"] + gated[:, 0]
+    y = (h[:, None].astype(x.dtype)) * gate
+    y = y @ p["out"].astype(x.dtype)
+    return y, {"conv": conv_state, "h": h}
+
+
+def rglru_init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    kc = cfg.ssm_conv or 4
+    return {"conv": jnp.zeros((batch, kc - 1, cfg.d_model), dtype),
+            "h": jnp.zeros((batch, cfg.d_model), jnp.float32)}

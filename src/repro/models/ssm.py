@@ -1,0 +1,169 @@
+"""Mamba-1 selective-SSM block (falcon-mamba-7b architecture).
+
+Forward over a sequence uses a *chunked* scan: `lax.scan` over chunks with
+a `jax.checkpoint`-wrapped chunk body (so the backward pass re-computes
+within-chunk state instead of saving S x [B, d_inner, N] residuals), and a
+plain time-step scan inside the chunk.  Decode keeps (conv_state,
+ssm_state) and advances one token in closed form.  The TPU performance
+path is the `repro.kernels.ssm_scan` Pallas kernel; this module is also
+its jnp oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.models.config import ModelConfig
+from repro.models.params import ParamDef
+
+
+def ssm_defs(cfg: ModelConfig):
+    d, di, N, dtr, kc = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                         cfg.dt_rank, cfg.ssm_conv)
+    return {
+        "in_proj": ParamDef((d, 2 * di), ("embed", "hidden")),
+        "conv_w": ParamDef((kc, di), ("state", "hidden")),
+        "conv_b": ParamDef((di,), ("hidden",), "zeros"),
+        "x_proj": ParamDef((di, dtr + 2 * N), ("hidden", None)),
+        "dt_proj": ParamDef((dtr, di), (None, "hidden")),
+        "dt_bias": ParamDef((di,), ("hidden",), "zeros"),
+        "A_log": ParamDef((di, N), ("hidden", "state"), "ones"),
+        "D": ParamDef((di,), ("hidden",), "ones"),
+        "out_proj": ParamDef((di, d), ("hidden", "embed")),
+    }
+
+
+def _ssm_inputs(p, x, cfg: ModelConfig):
+    """Projections shared by train/prefill/decode paths.
+
+    Returns (u, z, dt, B, C): u [B,S,di] conv output pre-activation input,
+    gate z, and the selective parameters.
+    """
+    di, N, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank
+    xz = x @ p["in_proj"].astype(x.dtype)
+    u, z = jnp.split(xz, 2, axis=-1)
+    return u, z
+
+
+def _selective(p, u_conv, cfg: ModelConfig):
+    N, dtr = cfg.ssm_state, cfg.dt_rank
+    proj = u_conv @ p["x_proj"].astype(u_conv.dtype)  # [B,S,dtr+2N]
+    dt_in, Bmat, Cmat = jnp.split(proj, [dtr, dtr + N], axis=-1)
+    dt = jax.nn.softplus(dt_in @ p["dt_proj"].astype(u_conv.dtype)
+                         + p["dt_bias"].astype(u_conv.dtype))
+    return dt, Bmat, Cmat
+
+
+def _causal_conv(p, u, cfg: ModelConfig, conv_state=None):
+    """Depthwise causal conv1d along S.  conv_state: [B, kc-1, di]."""
+    kc = cfg.ssm_conv
+    w = p["conv_w"].astype(u.dtype)              # [kc, di]
+    if conv_state is None:
+        pad = jnp.zeros((u.shape[0], kc - 1, u.shape[2]), u.dtype)
+    else:
+        pad = conv_state.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)       # [B, S+kc-1, di]
+    out = sum(up[:, i:i + u.shape[1]] * w[i] for i in range(kc))
+    out = out + p["conv_b"].astype(u.dtype)
+    new_state = up[:, -(kc - 1):] if kc > 1 else pad
+    return jax.nn.silu(out), new_state
+
+
+def ssm_scan_ref(decay, dBu, C, h0):
+    """Sequential selective scan:  h_t = decay_t * h_{t-1} + dBu_t;
+    y_t = sum_N C_t * h_t.   decay/dBu: [B,S,di,N]; C: [B,S,N].
+
+    This is the jnp oracle for the Pallas ssm_scan kernel.
+    """
+    def step(h, inp):
+        dec, du, c = inp
+        h = dec * h + du
+        y = jnp.einsum("bdn,bn->bd", h, c)
+        return h, y
+    xs = (decay.transpose(1, 0, 2, 3), dBu.transpose(1, 0, 2, 3),
+          C.transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return h, ys.transpose(1, 0, 2)              # [B,S,di]
+
+
+def ssm_block_apply(p, x, cfg: ModelConfig, chunk: int = 256,
+                    ssm_impl: str = "xla", return_state: bool = False):
+    """Full mamba block over a sequence.  x: [B, S, d] -> [B, S, d].
+
+    With ``return_state`` also returns the exact decode state after the
+    last token: {conv: last kc-1 pre-conv inputs, ssm: h_S} — used by
+    prefill so prefill+decode is bit-consistent with a full forward.
+    """
+    B, S, d = x.shape
+    di, N = cfg.d_inner, cfg.ssm_state
+    u_pre, z = _ssm_inputs(p, x, cfg)
+    u, _ = _causal_conv(p, u_pre, cfg)
+    dt, Bm, Cm = _selective(p, u, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [di, N]
+
+    nchunk = -(-S // chunk)
+    pad = nchunk * chunk - S
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+
+    def chunk_body(h, inp):
+        uc, dtc, bc, cc = inp                    # [B, chunk, ...]
+        dtf = dtc.astype(jnp.float32)
+        decay = jnp.exp(dtf[..., None] * A)      # [B,T,di,N]
+        dBu = (dtf * uc.astype(jnp.float32))[..., None] \
+            * bc.astype(jnp.float32)[..., None, :]
+        if ssm_impl == "pallas":
+            from repro.kernels.ssm_scan import ops as ssm_ops
+            h, y = ssm_ops.ssm_scan(decay, dBu, cc.astype(jnp.float32), h)
+        else:
+            h, y = ssm_scan_ref(decay, dBu, cc.astype(jnp.float32), h)
+        return h, y
+
+    xs = tuple(a.reshape(B, nchunk, chunk, -1).transpose(1, 0, 2, 3)
+               for a in (u, dt, Bm, Cm))
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    hN, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, xs)
+    y = ys.transpose(1, 0, 2, 3).reshape(B, nchunk * chunk, di)[:, :S]
+    y = y + u.astype(jnp.float32)[:, :S] * p["D"].astype(jnp.float32)
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        kc = cfg.ssm_conv
+        state = {"conv": u_pre[:, S - (kc - 1):] if kc > 1
+                 else jnp.zeros((B, 0, di), x.dtype),
+                 "ssm": hN}
+        return out, state
+    return out
+
+
+def ssm_decode_step(p, x, state, cfg: ModelConfig):
+    """One-token decode.  x: [B, 1, d]; state: dict(conv [B,kc-1,di],
+    ssm [B,di,N]) -> (y [B,1,d], new state)."""
+    B = x.shape[0]
+    di, N = cfg.d_inner, cfg.ssm_state
+    u, z = _ssm_inputs(p, x, cfg)
+    u, conv_state = _causal_conv(p, u, cfg, conv_state=state["conv"])
+    dt, Bm, Cm = _selective(p, u, cfg)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dtf = dt[:, 0].astype(jnp.float32)           # [B, di]
+    decay = jnp.exp(dtf[..., None] * A)          # [B, di, N]
+    dBu = (dtf * u[:, 0].astype(jnp.float32))[..., None] \
+        * Bm[:, 0].astype(jnp.float32)[:, None, :]
+    h = decay * state["ssm"] + dBu
+    y = jnp.einsum("bdn,bn->bd", h, Cm[:, 0].astype(jnp.float32))
+    y = y + u[:, 0].astype(jnp.float32) * p["D"].astype(jnp.float32)
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    y = y @ p["out_proj"].astype(x.dtype)
+    return y, {"conv": conv_state, "ssm": h}
+
+
+def ssm_init_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, cfg.d_inner), dtype),
+        "ssm": jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,165 @@
+"""Model zoo: family dispatch + abstract input specs for every shape cell.
+
+``step_fn(cfg, shape, flags)`` returns the function the dry-run lowers
+(train loss+grad+update is assembled in launch/train.py on top of
+``loss_fn``), and ``input_specs`` returns ShapeDtypeStructs (with
+NamedShardings when a mesh is active) for every model input — so full-size
+tensors are never allocated.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shd
+from repro.models import encdec, lm
+from repro.models.config import ModelConfig, ShapeConfig, SHAPES
+from repro.models.params import abstract_params, init_params
+
+
+def model_defs(cfg: ModelConfig):
+    if cfg.family == "encdec":
+        return encdec.encdec_defs(cfg)
+    return lm.lm_defs(cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig, flags=lm.RunFlags()):
+    if cfg.family == "encdec":
+        return encdec.loss_fn(params, batch, cfg, flags)
+    return lm.loss_fn(params, batch, cfg, flags)
+
+
+def prefill_fn(params, batch, cfg: ModelConfig, max_len: int,
+               flags=lm.RunFlags()):
+    if cfg.family == "encdec":
+        return encdec.prefill(params, batch["frames"], batch["tokens"], cfg,
+                              max_len, flags)
+    return lm.prefill(params, batch["tokens"], cfg, max_len, flags,
+                      prefix_embeds=batch.get("prefix_embeds"))
+
+
+def decode_fn(params, cache, tokens, cfg: ModelConfig, flags=lm.RunFlags()):
+    if cfg.family == "encdec":
+        return encdec.decode_step(params, cache, tokens, cfg, flags)
+    return lm.decode_step(params, cache, tokens, cfg, flags)
+
+
+# ------------------------------------------------------------- input specs
+
+def _sds(shape, dtype, axes=None):
+    sh = shd.named_sharding(axes, shape) if axes else None
+    if sh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract model-input batch for one shape cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok_axes = ("batch", "seq")
+    if shape.kind == "train":
+        out: dict[str, Any] = {}
+        if cfg.family == "encdec":
+            out["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16,
+                                 ("batch", "seq", None))
+            out["tokens"] = _sds((B, S), jnp.int32, tok_axes)
+            out["targets"] = _sds((B, S), jnp.int32, tok_axes)
+            return out
+        n_text = S - (cfg.n_patches if cfg.frontend == "vision" else 0)
+        if cfg.frontend == "vision":
+            out["prefix_embeds"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                        jnp.bfloat16, ("batch", "seq", None))
+        out["tokens"] = _sds((B, n_text), jnp.int32, tok_axes)
+        out["targets"] = _sds((B, n_text), jnp.int32, tok_axes)
+        return out
+    if shape.kind == "prefill":
+        out = {}
+        if cfg.family == "encdec":
+            out["frames"] = _sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16,
+                                 ("batch", "seq", None))
+        if cfg.frontend == "vision":
+            out["prefix_embeds"] = _sds((B, cfg.n_patches, cfg.d_model),
+                                        jnp.bfloat16, ("batch", "seq", None))
+            out["tokens"] = _sds((B, S - cfg.n_patches), jnp.int32, tok_axes)
+        else:
+            out["tokens"] = _sds((B, S), jnp.int32, tok_axes)
+        return out
+    # decode: one new token against a cache of seq_len
+    return {"tokens": _sds((B,), jnp.int32, ("batch",))}
+
+
+_CACHE_AXES = {
+    "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "kv_pos": ("layers", "kv_seq"),
+    "xk": ("layers", "batch", "seq", "kv_heads", None),
+    "xv": ("layers", "batch", "seq", "kv_heads", None),
+    "pos": (),
+    ("rec", "conv"): ("layers", "batch", None, "hidden"),
+    ("rec", "h"): ("layers", "batch", "hidden"),
+    ("ssm", "conv"): ("layers", "batch", None, "hidden"),
+    ("ssm", "ssm"): ("layers", "batch", "hidden", "state"),
+}
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract decode-cache pytree with shardings, via eval_shape."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "encdec":
+        def mk():
+            K, hd = cfg.n_kv_heads, cfg.hd
+            nl = cfg.n_layers
+            return {
+                "k": jnp.zeros((nl, B, S, K, hd), jnp.bfloat16),
+                "v": jnp.zeros((nl, B, S, K, hd), jnp.bfloat16),
+                "kv_pos": jnp.zeros((nl, S), jnp.int32),
+                "xk": jnp.zeros((nl, B, cfg.enc_seq, K, hd), jnp.bfloat16),
+                "xv": jnp.zeros((nl, B, cfg.enc_seq, K, hd), jnp.bfloat16),
+                "pos": jnp.int32(0),
+            }
+        abstract = jax.eval_shape(mk)
+    else:
+        abstract = jax.eval_shape(
+            functools.partial(lm.init_cache, cfg, B, S))
+
+    def annotate(path, leaf):
+        keys = tuple(p.key for p in path
+                     if isinstance(p, jax.tree_util.DictKey))
+        axes = _CACHE_AXES.get(keys if len(keys) > 1 else keys[0])
+        if axes is None:
+            return leaf
+        sh = shd.named_sharding(axes, leaf.shape)
+        if sh is None:
+            return leaf
+        return jax.ShapeDtypeStruct(leaf.shape, leaf.dtype, sharding=sh)
+
+    return jax.tree_util.tree_map_with_path(annotate, abstract)
+
+
+def abstract_model(cfg: ModelConfig, dtype=jnp.bfloat16):
+    return abstract_params(model_defs(cfg), dtype)
+
+
+def init_model(cfg: ModelConfig, seed: int = 0, dtype=jnp.bfloat16):
+    return init_params(model_defs(cfg), jax.random.PRNGKey(seed), dtype)
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig, seed: int = 0):
+    """Concrete random batch matching batch_specs (smoke tests/examples)."""
+    specs = batch_specs(cfg, shape)
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, s in specs.items():
+        key, k = jax.random.split(key)
+        if s.dtype == jnp.int32:
+            out[name] = jax.random.randint(k, s.shape, 0,
+                                           min(cfg.vocab_size, 1000),
+                                           jnp.int32)
+        else:
+            out[name] = jax.random.normal(k, s.shape, jnp.float32).astype(
+                s.dtype)
+    return out

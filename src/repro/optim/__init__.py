@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW, schedules, gradient compression."""
+from repro.optim.adamw import AdamWConfig, OptState, init, update, schedule, global_norm
+from repro.optim import compress
+

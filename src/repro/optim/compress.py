@@ -1,0 +1,54 @@
+"""Error-feedback int8 gradient compression for the cross-pod axis.
+
+At multi-pod scale the data-center interconnect between pods is the
+scarcest link, so the cross-pod gradient reduction is compressed:
+
+    q_t   = round(clip((g_t + e_t) / s_t)) in int8        (per-tensor scale)
+    wire  = all_gather(q_t, axis="pod")    # int8 bytes on the DCI
+    g'_t  = s_t * mean(dequant)            # exact mean of quantized grads
+    e_t+1 = (g_t + e_t) - s_t * q_t        # error feedback residual
+
+Error feedback makes the quantization bias vanish over steps (Karimireddy
+et al., 2019).  The residual ``e`` lives in the optimizer extras and is
+checkpointed with the rest of the state.
+
+``cross_pod_mean`` is written for use inside ``shard_map`` over the
+``pod`` mesh axis (data/model axes stay under GSPMD auto-sharding).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(g, err):
+    """-> (q int8, scale f32 scalar, new_err)."""
+    g32 = g.astype(jnp.float32) + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    new_err = g32 - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def cross_pod_mean(g, err, axis_name: str = "pod"):
+    """Compressed mean over the pod axis (call inside shard_map).
+
+    Wire cost: int8 all_gather (N bytes/pod) + f32 scalar gather, vs 4N for
+    an uncompressed f32 all-reduce — ~4x less DCI traffic.
+    """
+    q, scale, new_err = quantize(g, err)
+    qs = jax.lax.all_gather(q, axis_name)            # [P, ...] int8 on wire
+    ss = jax.lax.all_gather(scale, axis_name)        # [P] f32
+    mean = jnp.mean(qs.astype(jnp.float32)
+                    * ss.reshape((-1,) + (1,) * (q.ndim)), axis=0)
+    return mean.astype(g.dtype), new_err
+
+
+def init_error(params):
+    return jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)

@@ -1,0 +1,48 @@
+"""Charge model: Table 6.1 reproduction, Fig 4.2 shape, integrator check."""
+
+import numpy as np
+import pytest
+
+from repro.core import charge_model as cm
+from repro.core.timing import TABLE_6_1
+
+
+@pytest.mark.parametrize("duration,published", [
+    (1.0, (8.0, 22.0)), (4.0, (9.0, 24.0)), (16.0, (11.0, 28.0)),
+    (64.0, (13.75, 35.0)),
+])
+def test_table_6_1(duration, published):
+    """Model-derived tRCD/tRAS must match the thesis's SPICE table."""
+    d = cm.derive_timings(duration)
+    assert abs(d.tRCD_ns - published[0]) < 0.5, (duration, d.tRCD_ns)
+    assert abs(d.tRAS_ns - published[1]) < 0.8, (duration, d.tRAS_ns)
+
+
+def test_fig_4_2_monotone():
+    """Less initial charge -> slower bitline -> larger ready time."""
+    idles = [0.0, 0.5, 1, 2, 4, 8, 16, 32, 64]
+    t = [float(cm.t_ready_ns(d)) for d in idles]
+    assert all(a <= b + 1e-6 for a, b in zip(t, t[1:])), t
+    v = [float(cm.cell_voltage(d)) for d in idles]
+    assert all(a >= b - 1e-6 for a, b in zip(v, v[1:])), v
+    assert v[0] == pytest.approx(cm.VDD)
+
+
+def test_restore_after_ready():
+    for d in (0.0, 1.0, 16.0, 64.0):
+        assert float(cm.t_restore_ns(d)) > float(cm.t_ready_ns(d))
+
+
+def test_integrator_matches_closed_form():
+    for d in (1.0, 16.0, 64.0):
+        closed = float(cm.t_ready_ns(d))
+        numeric = cm.t_ready_ns_numeric(d)
+        assert abs(closed - numeric) < 0.1, (d, closed, numeric)
+
+
+def test_lowered_params_never_exceed_baseline():
+    from repro.core.timing import DDR3_1600
+    for d in (0.5, 1.0, 4.0, 16.0, 64.0, 128.0):
+        p = cm.lowered_params(d)
+        assert p.tRCD <= DDR3_1600.tRCD
+        assert p.tRAS <= DDR3_1600.tRAS

@@ -1,0 +1,104 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+RNG = np.random.default_rng(0)
+
+
+def _mk(shape, dtype=jnp.bfloat16, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, jnp.float32).astype(
+        dtype)
+
+
+@pytest.mark.parametrize("B,S,H,K,hd,causal,window", [
+    (2, 128, 4, 2, 64, True, 0),
+    (1, 256, 8, 2, 64, True, 64),
+    (2, 96, 4, 4, 32, True, 0),        # non-block-multiple S
+    (1, 64, 4, 1, 128, False, 0),      # MQA, bidirectional
+    (1, 160, 6, 2, 48, True, 32),      # odd head_dim, SWA
+])
+@pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+def test_flash_attention(B, S, H, K, hd, causal, window, dtype):
+    from repro.kernels.flash_attention import ops, ref
+    q, k, v = (_mk((B, S, H, hd), dtype), _mk((B, S, K, hd), dtype),
+               _mk((B, S, K, hd), dtype))
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              block_q=64, block_kv=64)
+    G = H // K
+    q5 = q.reshape(B, S, K, G, hd).transpose(0, 2, 3, 1, 4)
+    r = ref.attention_ref(q5, k.transpose(0, 2, 1, 3),
+                          v.transpose(0, 2, 1, 3), causal=causal,
+                          window=window)
+    r = r.transpose(0, 3, 1, 2, 4).reshape(B, S, H, hd)
+    tol = 0.02 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("B,H,K,hd,W,window,fill", [
+    (2, 8, 2, 64, 128, 0, 100),
+    (1, 4, 4, 32, 256, 64, 256),
+    (2, 4, 1, 128, 64, 0, 10),         # nearly-empty cache
+    (1, 8, 8, 64, 96, 0, 96),          # MHA, non-multiple W
+])
+def test_paged_attention(B, H, K, hd, W, window, fill):
+    from repro.kernels.paged_attention import ops, ref
+    q = _mk((B, 1, H, hd))
+    kc, vc = _mk((B, W, K, hd)), _mk((B, W, K, hd))
+    kv_pos = jnp.where(jnp.arange(W) < fill, jnp.arange(W), -1).astype(
+        jnp.int32)
+    q_pos = jnp.asarray([fill - 1], jnp.int32)
+    out = ops.decode_attention(q, kc, vc, q_pos=q_pos, kv_pos=kv_pos,
+                               window=window, rope_theta=0.0, block_kv=64)
+    G = H // K
+    r = ref.decode_attention_ref(
+        q.reshape(B, K, G, hd), kc.transpose(0, 2, 1, 3),
+        vc.transpose(0, 2, 1, 3),
+        jnp.broadcast_to(kv_pos[None], (B, W)),
+        jnp.broadcast_to(q_pos, (B,)), window=window)
+    np.testing.assert_allclose(
+        np.asarray(out.reshape(B, K, G, hd), np.float32),
+        np.asarray(r, np.float32), atol=0.03, rtol=0.03)
+
+
+@pytest.mark.parametrize("B,T,D,Nst,block_d", [
+    (2, 16, 96, 8, 32),
+    (1, 32, 64, 16, 64),
+    (2, 8, 100, 4, 32),                # non-multiple D
+    (1, 64, 32, 16, 16),
+])
+def test_ssm_scan(B, T, D, Nst, block_d):
+    from repro.kernels.ssm_scan import ops
+    from repro.models.ssm import ssm_scan_ref
+    decay = jnp.asarray(RNG.uniform(0.5, 1.0, (B, T, D, Nst)), jnp.float32)
+    dbu = jnp.asarray(RNG.normal(size=(B, T, D, Nst)) * 0.1, jnp.float32)
+    c = jnp.asarray(RNG.normal(size=(B, T, Nst)), jnp.float32)
+    h0 = jnp.asarray(RNG.normal(size=(B, D, Nst)), jnp.float32)
+    h_k, y_k = ops.ssm_scan(decay, dbu, c, h0, block_d=block_d)
+    h_r, y_r = ssm_scan_ref(decay, dbu, c, h0)
+    np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-4)
+
+
+def test_hcrac_kernel_vs_ref_and_sequential():
+    import jax.numpy as jnp
+    from repro.core import hcrac as hcl
+    from repro.kernels.hcrac import ops as hops
+    from repro.kernels.hcrac.ref import hcrac_lookup_ref
+    cfg = hcl.HCRACConfig(n_entries=64, n_ways=2, caching_cycles=10_000)
+    st = hcl.init(cfg)
+    t = 0
+    for g, dt in zip(RNG.integers(0, 500, 150),
+                     RNG.integers(1, 300, 150)):
+        t += int(dt)
+        st = hcl.insert(cfg, st, jnp.int32(g), jnp.int32(t))
+    qg = jnp.asarray(RNG.integers(0, 500, 96), jnp.int32)
+    qt = jnp.full((96,), t + 10, jnp.int32)
+    hk = hops.hcrac_lookup(cfg, st, qg, qt)
+    hr = hcrac_lookup_ref(cfg, st, qg, qt)
+    hs = jnp.asarray([hcl.lookup(cfg, st, g, qt[0])[0] for g in qg])
+    assert bool((hk == hr).all())
+    assert bool((hr == hs).all())

@@ -1,0 +1,138 @@
+"""DRAM simulator behaviour: timing invariants, mechanism orderings,
+multi-core dynamics — plus hypothesis properties on arbitrary traces."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DDR3_1600, MechanismConfig, SimConfig, simulate,
+                        weighted_speedup)
+from repro.core.rltl import rltl_fractions
+from repro.core.traces import (Trace, batch_traces, multicore_batch,
+                               single_core_batch)
+
+N = 8000
+
+
+def _stats(kind, policy="open", batch=None, **kw):
+    batch = batch if batch is not None else single_core_batch(
+        "milc_like", N, seed=5)
+    return simulate(batch, SimConfig(mech=MechanismConfig(kind=kind, **kw),
+                                     policy=policy))
+
+
+def test_mechanism_ordering():
+    """lldram <= chargecache <= base in cycles (CC can only help), and
+    cc_nuat <= cc."""
+    batch = single_core_batch("milc_like", N, seed=5)
+    base = _stats("base", batch=batch)
+    cc = _stats("chargecache", batch=batch)
+    nuat = _stats("nuat", batch=batch)
+    ccn = _stats("cc_nuat", batch=batch)
+    ll = _stats("lldram", batch=batch)
+    assert ll["total_cycles"] <= cc["total_cycles"] <= base["total_cycles"]
+    assert ccn["total_cycles"] <= cc["total_cycles"] + 1
+    assert nuat["total_cycles"] <= base["total_cycles"]
+
+
+def test_lldram_equals_cc_at_full_hit():
+    """LL-DRAM == ChargeCache with a 100% hit rate (thesis §6)."""
+    ll = _stats("lldram")
+    assert ll["acts_lowered_frac"] == pytest.approx(1.0)
+
+
+def test_hit_rate_monotone_in_capacity():
+    batch = single_core_batch("soplex_like", N, seed=5)
+    from repro.core import HCRACConfig
+    hits = []
+    for cap in (16, 128, 1024):
+        s = simulate(batch, SimConfig(mech=MechanismConfig(
+            kind="chargecache",
+            hcrac=HCRACConfig(n_entries=cap, caching_cycles=800_000))))
+        hits.append(s["hcrac_hit_rate"])
+    assert hits[0] <= hits[1] + 0.02 and hits[1] <= hits[2] + 0.02, hits
+
+
+def test_row_hit_faster_than_conflict():
+    """A trace of pure row hits must finish faster than pure conflicts."""
+    gap = np.full(2000, 10, np.int32)
+    hit_trace = Trace(gap=gap, bank=np.zeros(2000, np.int32),
+                      row=np.zeros(2000, np.int32),
+                      is_write=np.zeros(2000, bool),
+                      dep=np.zeros(2000, bool))
+    conf_trace = Trace(gap=gap, bank=np.zeros(2000, np.int32),
+                       row=np.arange(2000, dtype=np.int32) % 2,
+                       is_write=np.zeros(2000, bool),
+                       dep=np.zeros(2000, bool))
+    h = simulate(batch_traces([hit_trace]),
+                 SimConfig(mech=MechanismConfig(kind="base")))
+    c = simulate(batch_traces([conf_trace]),
+                 SimConfig(mech=MechanismConfig(kind="base")))
+    assert h["total_cycles"] < c["total_cycles"]
+    assert h["row_hit_rate"] > 0.95
+    assert c["row_conflicts"] >= 1890  # all but warmup-masked requests
+
+
+def test_conflict_trace_has_full_rltl():
+    """Ping-pong conflicts re-activate rows just after their precharge ->
+    RLTL ~ 1 (the thesis's core observation)."""
+    gap = np.full(4000, 20, np.int32)
+    tr = Trace(gap=gap, bank=np.zeros(4000, np.int32),
+               row=np.arange(4000, dtype=np.int32) % 2,
+               is_write=np.zeros(4000, bool), dep=np.zeros(4000, bool))
+    s = simulate(batch_traces([tr]),
+                 SimConfig(mech=MechanismConfig(kind="base")))
+    f = rltl_fractions(s)
+    assert f["rltl_0.125ms"] > 0.95
+    # ... and ChargeCache should serve nearly all ACTs lowered
+    s2 = simulate(batch_traces([tr]),
+                  SimConfig(mech=MechanismConfig(kind="chargecache")))
+    assert s2["hcrac_hit_rate"] > 0.95
+
+
+def test_multicore_weighted_speedup_sane():
+    batch = multicore_batch(["milc_like", "soplex_like", "lbm_like",
+                             "gcc_like"], 3000)
+    base = simulate(batch, SimConfig(mech=MechanismConfig(kind="base"),
+                                     policy="closed"))
+    cc = simulate(batch, SimConfig(mech=MechanismConfig(kind="chargecache"),
+                                   policy="closed"))
+    ws = weighted_speedup(base["core_end"], cc["core_end"])
+    assert 0.99 <= ws <= 1.25
+
+
+def test_refresh_fraction_near_eighth():
+    """Rolling refresh + uncorrelated accesses -> ~12.5% of ACTs within
+    8 ms of the row's refresh (8/64 ms) — thesis Fig 3.1's ~12%."""
+    s = _stats("base")
+    f = rltl_fractions(s)
+    assert 0.08 <= f["refresh_8ms_frac"] <= 0.18
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from(["open", "closed"]))
+def test_property_latency_bounds(seed, policy):
+    """PROPERTY: on any trace, per-request mean latency is bounded below
+    by the row-hit service time (tCL+tBL) and total cycles are monotone
+    non-increasing from base -> chargecache -> lldram."""
+    rng = np.random.default_rng(seed)
+    n = 800
+    tr = Trace(gap=rng.integers(1, 80, n).astype(np.int32),
+               bank=rng.integers(0, 16, n).astype(np.int32),
+               row=rng.integers(0, 64, n).astype(np.int32),
+               is_write=rng.random(n) < 0.3,
+               dep=rng.random(n) < 0.3)
+    batch = batch_traces([tr])
+    base = simulate(batch, SimConfig(mech=MechanismConfig(kind="base"),
+                                     policy=policy))
+    cc = simulate(batch, SimConfig(
+        mech=MechanismConfig(kind="chargecache"), policy=policy))
+    ll = simulate(batch, SimConfig(mech=MechanismConfig(kind="lldram"),
+                                   policy=policy))
+    t = DDR3_1600
+    assert base["avg_latency"] >= t.tCL + t.tBL - 1e-6
+    assert ll["total_cycles"] <= cc["total_cycles"] <= base["total_cycles"]
+    # stats conservation
+    assert (base["row_hits"] + base["row_closed"]
+            + base["row_conflicts"]) == base["n_req"]
+    assert base["reads"] + base["writes"] == base["n_req"]
