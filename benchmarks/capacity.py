@@ -2,6 +2,11 @@
 
 Paper claims: 128 entries -> 38% (1c) / 66% (8c) hit rate; speedup 8.8%
 at 128 entries, 10.6% at 1024 (8-core); diminishing beyond.
+
+Batched engine: each workload/mix evaluates its *entire* capacity grid
+(base + all capacities) through one vmapped ``sweep()`` call, and the
+``pad_steps`` mode means every workload shares one XLA compilation —
+compile once, run many (DESIGN.md §4).
 """
 
 from __future__ import annotations
@@ -18,13 +23,12 @@ def run() -> list[str]:
     rows = []
 
     def single_hits():
-        out = {}
-        for cap in CAPS:
-            hits = [C.sim_single(n, "chargecache",
-                                 n_entries=cap)["hcrac_hit_rate"]
-                    for n in C.SINGLE_NAMES]
-            out[cap] = float(np.mean(hits))
-        return out
+        grid = [C.sim_cfg("chargecache", 1, n_entries=cap) for cap in CAPS]
+        out = {cap: [] for cap in CAPS}
+        for row in C.sweep_singles(C.SINGLE_NAMES, grid).values():
+            for cap, s in zip(CAPS, row):
+                out[cap].append(s["hcrac_hit_rate"])
+        return {cap: float(np.mean(v)) for cap, v in out.items()}
 
     h1, us1 = C.timed(single_hits)
     rows.append(C.csv_row(
@@ -34,18 +38,19 @@ def run() -> list[str]:
     mixes = C.eight_core_mixes()[:5 if not C.QUICK else 1]
 
     def eight():
-        hits = {}
-        speed = {}
-        for cap in CAPS:
-            hs, sp = [], []
-            for mix in mixes:
-                b = C.sim_mix(mix, "base")
-                s = C.sim_mix(mix, "chargecache", n_entries=cap)
-                hs.append(s["hcrac_hit_rate"])
-                sp.append(weighted_speedup(b["core_end"], s["core_end"]))
-            hits[cap] = float(np.mean(hs))
-            speed[cap] = float(np.mean(sp))
-        return hits, speed
+        # grid point 0 = baseline, then one point per capacity
+        grid = [C.sim_cfg("base", 8)] + [
+            C.sim_cfg("chargecache", 8, n_entries=cap) for cap in CAPS]
+        hits = {cap: [] for cap in CAPS}
+        speed = {cap: [] for cap in CAPS}
+        for res in C.sweep_mixes(mixes, grid):
+            base = res[0]
+            for cap, s in zip(CAPS, res[1:]):
+                hits[cap].append(s["hcrac_hit_rate"])
+                speed[cap].append(
+                    weighted_speedup(base["core_end"], s["core_end"]))
+        return ({c: float(np.mean(v)) for c, v in hits.items()},
+                {c: float(np.mean(v)) for c, v in speed.items()})
 
     (h8, s8), us8 = C.timed(eight)
     rows.append(C.csv_row(

@@ -7,13 +7,29 @@ Workload sizes follow the thesis's methodology scaled to this container
 
 from __future__ import annotations
 
+import functools
+import multiprocessing
 import os
+import sys
 import time
+
+# Expose one XLA host device per CPU core (before jax's first import) so
+# sweep()/sweep_traces() shard their vmapped grid/batch axis across cores
+# — near-linear scaling of the batched engine (DESIGN.md §4).  Opt out or
+# resize with REPRO_BENCH_DEVICES; a no-op once jax is already loaded.
+if "jax" not in sys.modules:
+    _ndev = int(os.environ.get("REPRO_BENCH_DEVICES",
+                               min(8, multiprocessing.cpu_count())))
+    if _ndev > 1 and "host_platform_device_count" not in os.environ.get(
+            "XLA_FLAGS", ""):
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={_ndev}").strip()
 
 import numpy as np
 
 from repro.core import (HCRACConfig, MechanismConfig, SimConfig, simulate,
-                        weighted_speedup)
+                        sweep, sweep_traces, weighted_speedup)
 from repro.core.traces import (WORKLOADS, multicore_batch, random_mixes,
                                single_core_batch)
 
@@ -40,17 +56,83 @@ def mech_config(kind: str, n_cores: int = 1, n_entries: int = 128,
     )
 
 
+def sim_cfg(kind: str, n_cores: int = 1, policy: str | None = None,
+            **mech_kw) -> SimConfig:
+    """One grid point: a full SimConfig for sweep()/simulate()."""
+    if policy is None:
+        policy = "open" if n_cores == 1 else "closed"
+    return SimConfig(mech=mech_config(kind, n_cores, **mech_kw),
+                     policy=policy)
+
+
+@functools.lru_cache(maxsize=None)
+def _single_batch(name: str, n_req: int, seed: int):
+    return single_core_batch(name, n_req, seed=seed)
+
+
+@functools.lru_cache(maxsize=None)
+def _mix_batch(names: tuple, n_req: int, seed: int):
+    return multicore_batch(list(names), n_req, seed=seed)
+
+
 def sim_single(name: str, kind: str, seed: int = 3, **mech_kw) -> dict:
-    batch = single_core_batch(name, N_REQ_1C, seed=seed)
-    cfg = SimConfig(mech=mech_config(kind, 1, **mech_kw), policy="open")
-    return simulate(batch, cfg)
+    batch = _single_batch(name, N_REQ_1C, seed)
+    return simulate(batch, sim_cfg(kind, 1, **mech_kw))
 
 
 def sim_mix(names: list[str], kind: str, seed: int = 3, **mech_kw) -> dict:
-    batch = multicore_batch(names, N_REQ_8C, seed=seed)
-    cfg = SimConfig(mech=mech_config(kind, len(names), **mech_kw),
-                    policy="closed")
-    return simulate(batch, cfg)
+    batch = _mix_batch(tuple(names), N_REQ_8C, seed)
+    return simulate(batch, sim_cfg(kind, len(names), **mech_kw))
+
+
+def sweep_single(name: str, grid: list[SimConfig], seed: int = 3) -> list[dict]:
+    """Evaluate a whole config grid on one single-core workload in one
+    vmapped call (pad_steps so all workloads share one compilation)."""
+    batch = _single_batch(name, N_REQ_1C, seed)
+    return sweep(batch, grid, pad_steps=True, rltl=False)
+
+
+def sweep_mix(names: list[str], grid: list[SimConfig],
+              seed: int = 3) -> list[dict]:
+    """Evaluate a whole config grid on one 8-core mix in one vmapped call
+    (pad_steps so all mixes share one compilation)."""
+    batch = _mix_batch(tuple(names), N_REQ_8C, seed)
+    return sweep(batch, grid, pad_steps=True, rltl=False)
+
+
+def _grouped_sweep(batches: list, grid: list[SimConfig]) -> list[list[dict]]:
+    """sweep_traces over batches grouped by core count; within a group,
+    short batches (low-traffic workloads) are zero-padded to the longest
+    trace so the whole group shares one compilation.  Input order is
+    preserved."""
+    from repro.core.traces import pad_batch_to
+    by_cores: dict = {}
+    for i, b in enumerate(batches):
+        by_cores.setdefault(b.gap.shape[0], []).append(i)
+    out: list = [None] * len(batches)
+    for idxs in by_cores.values():
+        max_len = max(batches[i].gap.shape[1] for i in idxs)
+        res = sweep_traces([pad_batch_to(batches[i], max_len) for i in idxs],
+                           grid)
+        for i, row in zip(idxs, res):
+            out[i] = row
+    return out
+
+
+def sweep_singles(names: list[str], grid: list[SimConfig],
+                  seed: int = 3) -> dict[str, list[dict]]:
+    """The whole (workload x config) evaluation matrix in one nested-vmap
+    call per trace shape: returns name -> [stats per grid point]."""
+    batches = [_single_batch(n, N_REQ_1C, seed) for n in names]
+    return dict(zip(names, _grouped_sweep(batches, grid)))
+
+
+def sweep_mixes(mixes: list[list[str]], grid: list[SimConfig],
+                seed: int = 3) -> list[list[dict]]:
+    """The whole (mix x config) evaluation matrix in one nested-vmap call
+    per trace shape: returns [mix index][grid point] stats."""
+    batches = [_mix_batch(tuple(m), N_REQ_8C, seed) for m in mixes]
+    return _grouped_sweep(batches, grid)
 
 
 def timed(fn, *args, **kw):

@@ -2,6 +2,9 @@
 
 Paper claims: -1.8% avg / -6.9% max (single-core); -7.9% avg / -14.1% max
 (eight-core).
+
+Batched engine: base + ChargeCache evaluate per workload/mix in one
+``sweep()`` call.
 """
 
 from __future__ import annotations
@@ -22,12 +25,9 @@ def run() -> list[str]:
     rows = []
 
     def single():
-        red = []
-        for name in C.SINGLE_NAMES:
-            b = C.sim_single(name, "base")
-            m = C.sim_single(name, "chargecache")
-            red.append(reduction(b, m))
-        return red
+        grid = [C.sim_cfg("base", 1), C.sim_cfg("chargecache", 1)]
+        return [reduction(*row)
+                for row in C.sweep_singles(C.SINGLE_NAMES, grid).values()]
 
     red1, us1 = C.timed(single)
     rows.append(C.csv_row(
@@ -35,12 +35,9 @@ def run() -> list[str]:
         f"avg={np.mean(red1):.4f};max={np.max(red1):.4f}"))
 
     def eight():
-        red = []
-        for mix in C.eight_core_mixes():
-            b = C.sim_mix(mix, "base")
-            m = C.sim_mix(mix, "chargecache")
-            red.append(reduction(b, m))
-        return red
+        grid = [C.sim_cfg("base", 8), C.sim_cfg("chargecache", 8)]
+        return [reduction(*res)
+                for res in C.sweep_mixes(C.eight_core_mixes(), grid)]
 
     red8, us8 = C.timed(eight)
     rows.append(C.csv_row(

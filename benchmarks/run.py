@@ -1,23 +1,55 @@
 """Benchmark driver: one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV (see EXPERIMENTS.md for the
-mapping to the thesis's tables/figures).  REPRO_BENCH_QUICK=1 shrinks
-workloads for CI.
+mapping to the thesis's tables/figures) and writes a machine-readable
+``BENCH_results.json`` (name -> us_per_call + parsed derived values)
+next to the CSV stream.  REPRO_BENCH_QUICK=1 shrinks workloads for CI
+and exercises the ``sweep()`` engine end to end (sweep_bench).
 """
 
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
+
+RESULTS_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_results.json")
+
+
+def _parse_derived(derived: str) -> dict:
+    """Best-effort ``k=v;k2=v2`` -> dict with numeric values parsed."""
+    out = {}
+    for item in derived.split(";"):
+        if "=" not in item:
+            continue
+        k, _, v = item.partition("=")
+        try:
+            out[k] = float(v)
+        except ValueError:
+            out[k] = v
+    return out
+
+
+def _record(results: dict, row: str) -> None:
+    name, _, rest = row.partition(",")
+    us, _, derived = rest.partition(",")
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    results[name] = {"us_per_call": us_val, "derived": derived,
+                     "values": _parse_derived(derived)}
 
 
 def main() -> None:
     from benchmarks import (capacity, charge_model_bench, duration, energy,
                             kernels_bench, rltl, roofline_bench,
-                            serving_trace, speedup)
+                            serving_trace, speedup, sweep_bench)
     mods = [
         ("charge_model", charge_model_bench),
         ("rltl", rltl),
+        ("sweep", sweep_bench),
         ("speedup", speedup),
         ("energy", energy),
         ("capacity", capacity),
@@ -27,15 +59,22 @@ def main() -> None:
         ("roofline", roofline_bench),
     ]
     print("name,us_per_call,derived")
+    results: dict = {}
     failed = []
     for name, mod in mods:
         try:
             for row in mod.run():
                 print(row, flush=True)
+                _record(results, row)
         except Exception as e:
             failed.append(name)
             traceback.print_exc()
             print(f"{name},0,ERROR:{type(e).__name__}", flush=True)
+            results[name] = {"us_per_call": None, "derived": None,
+                             "error": type(e).__name__}
+    with open(RESULTS_JSON, "w") as f:
+        json.dump(results, f, indent=2, sort_keys=True)
+    print(f"# wrote {RESULTS_JSON} ({len(results)} entries)", flush=True)
     if failed:
         sys.exit(1)
 

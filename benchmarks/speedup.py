@@ -3,6 +3,10 @@
 Paper claims: single-core avg +2.1% (up to 9.3%); eight-core avg +8.6%
 (CC), +2.5% (NUAT), +9.6% (CC+NUAT), LL-DRAM ~+13%; and ~67% of
 activations served with lowered timings on eight-core.
+
+Batched engine: base + all four mechanisms evaluate per workload/mix in
+one vmapped ``sweep()`` call — mechanism selection is traced data, so
+the five kinds share one compiled scan (DESIGN.md §4).
 """
 
 from __future__ import annotations
@@ -16,12 +20,14 @@ MECHS = ("chargecache", "nuat", "cc_nuat", "lldram")
 
 
 def single_core() -> dict:
+    grid = [C.sim_cfg("base", 1)] + [C.sim_cfg(m, 1) for m in MECHS]
     out = {m: {} for m in MECHS}
     lowered_frac = {}
+    matrix = C.sweep_singles(C.SINGLE_NAMES, grid)
     for name in C.SINGLE_NAMES:
-        base = C.sim_single(name, "base")
-        for m in MECHS:
-            s = C.sim_single(name, m)
+        res = matrix[name]
+        base = res[0]
+        for m, s in zip(MECHS, res[1:]):
             out[m][name] = base["total_cycles"] / max(s["total_cycles"], 1)
             if m == "chargecache":
                 lowered_frac[name] = s["acts_lowered_frac"]
@@ -32,12 +38,12 @@ def single_core() -> dict:
 
 
 def eight_core() -> dict:
+    grid = [C.sim_cfg("base", 8)] + [C.sim_cfg(m, 8) for m in MECHS]
     out = {m: [] for m in MECHS}
     lowered = []
-    for mix in C.eight_core_mixes():
-        base = C.sim_mix(mix, "base")
-        for m in MECHS:
-            s = C.sim_mix(mix, m)
+    for res in C.sweep_mixes(C.eight_core_mixes(), grid):
+        base = res[0]
+        for m, s in zip(MECHS, res[1:]):
             out[m].append(weighted_speedup(base["core_end"], s["core_end"]))
             if m == "chargecache":
                 lowered.append(s["acts_lowered_frac"])

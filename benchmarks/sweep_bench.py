@@ -1,0 +1,53 @@
+"""Batched experiment engine: compile-once/run-many characterization.
+
+Runs a capacity x duration grid (>= 20 points) through a single
+``sweep()`` call and reports (a) the cold call (one XLA compilation of
+the vmapped scan + run), (b) the warm call (run only), and (c) the
+amortized per-grid-point cost — the engine's headline economics vs the
+seed's compile-per-config Python loop.  Doubles as the REPRO_BENCH_QUICK
+smoke target for ``sweep()``.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common as C
+from repro.core import sweep
+from repro.core import simulator as sim_mod
+from repro.core.traces import single_core_batch
+
+CAPS = (32, 64, 128, 512, 1024)
+DURATIONS_MS = (1.0, 2.0, 4.0, 16.0)
+
+
+def run() -> list[str]:
+    n_req = 5_000 if C.QUICK else 40_000
+    batch = single_core_batch("soplex_like", n_req, seed=11)
+    grid = [C.sim_cfg("chargecache", 1, n_entries=cap, caching_ms=d)
+            for cap in CAPS for d in DURATIONS_MS]
+
+    before = sim_mod._run_batched._cache_size()
+    res_cold, us_cold = C.timed(sweep, batch, grid)
+    compiles = sim_mod._run_batched._cache_size() - before
+    res_warm, us_warm = C.timed(sweep, batch, grid)
+    assert compiles == 1, f"expected one compilation, saw {compiles}"
+    assert len(res_cold) == len(grid)
+    # warm run must be deterministic
+    assert all(int(a["hcrac_hits"]) == int(b["hcrac_hits"])
+               for a, b in zip(res_cold, res_warm))
+
+    g = len(grid)
+    hit_lo = res_warm[0]["hcrac_hit_rate"]
+    hit_hi = res_warm[-len(DURATIONS_MS)]["hcrac_hit_rate"]
+    return [
+        C.csv_row("sweep_grid_cold", us_cold,
+                  f"points={g};compiles={compiles}"
+                  f";us_per_point={us_cold / g:.0f}"),
+        C.csv_row("sweep_grid_warm", us_warm,
+                  f"points={g};us_per_point={us_warm / g:.0f}"
+                  f";hit_32e={hit_lo:.3f};hit_1024e={hit_hi:.3f}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

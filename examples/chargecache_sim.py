@@ -2,11 +2,19 @@
 
 Run:  PYTHONPATH=src python examples/chargecache_sim.py [--workload mcf_like]
       PYTHONPATH=src python examples/chargecache_sim.py --eight-core
+      PYTHONPATH=src python examples/chargecache_sim.py --heat-grid
+
+``--heat-grid`` demonstrates the batched experiment engine: a full HCRAC
+capacity x caching-duration grid (plus all five mechanism kinds) is
+evaluated through single ``sweep()`` calls — one XLA compilation for the
+whole grid instead of one per point.
 """
 
 import argparse
+import time
 
-from repro.core import (MechanismConfig, SimConfig, simulate,
+from repro.core import (HCRACConfig, MechanismConfig, SimConfig,
+                        lowered_for_duration, ms_to_cycles, simulate, sweep,
                         weighted_speedup)
 from repro.core.energy import energy_nj
 from repro.core.rltl import rltl_fractions
@@ -15,12 +23,56 @@ from repro.core.traces import (WORKLOADS, multicore_batch, random_mixes,
 
 MECHS = ("base", "chargecache", "nuat", "cc_nuat", "lldram")
 
+HEAT_CAPS = (32, 64, 128, 256, 512, 1024)
+HEAT_DURATIONS_MS = (0.5, 1.0, 2.0, 4.0, 16.0)
+
+
+def heat_grid(batch, policy: str) -> None:
+    """capacity x duration hit-rate/speedup heat table, one sweep() call."""
+    grid = [SimConfig(mech=MechanismConfig(kind="base"), policy=policy)]
+    for cap in HEAT_CAPS:
+        for d in HEAT_DURATIONS_MS:
+            grid.append(SimConfig(
+                mech=MechanismConfig(
+                    kind="chargecache",
+                    hcrac=HCRACConfig(n_entries=cap,
+                                      caching_cycles=ms_to_cycles(d)),
+                    lowered=lowered_for_duration(d)),
+                policy=policy))
+    t0 = time.time()
+    res = sweep(batch, grid, rltl=False)
+    dt = time.time() - t0
+    base, points = res[0], res[1:]
+    print(f"\n{len(grid)}-point capacity x duration grid in one sweep() "
+          f"call: {dt:.1f}s ({1e3 * dt / len(grid):.0f} ms/point)")
+
+    print(f"\nHCRAC hit rate (rows: entries; cols: caching duration)")
+    hdr = "entries".rjust(8) + "".join(f"{d:g}ms".rjust(9)
+                                       for d in HEAT_DURATIONS_MS)
+    print(hdr)
+    it = iter(points)
+    rows = {cap: [next(it) for _ in HEAT_DURATIONS_MS] for cap in HEAT_CAPS}
+    for cap in HEAT_CAPS:
+        print(f"{cap:8d}" + "".join(
+            f"{s['hcrac_hit_rate']:9.2%}" for s in rows[cap]))
+
+    print(f"\nspeedup over baseline")
+    print(hdr)
+    for cap in HEAT_CAPS:
+        cells = []
+        for s in rows[cap]:
+            sp = weighted_speedup(base["core_end"], s["core_end"])
+            cells.append(f"{sp:9.4f}")
+        print(f"{cap:8d}" + "".join(cells))
+
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="soplex_like",
                     choices=[w.name for w in WORKLOADS])
     ap.add_argument("--eight-core", action="store_true")
+    ap.add_argument("--heat-grid", action="store_true",
+                    help="capacity x duration sweep in one call")
     ap.add_argument("--n-req", type=int, default=60_000)
     args = ap.parse_args()
 
@@ -34,10 +86,14 @@ def main():
         batch = single_core_batch(args.workload, args.n_req)
         policy = "open"
 
-    results = {}
-    for kind in MECHS:
-        results[kind] = simulate(
-            batch, SimConfig(mech=MechanismConfig(kind=kind), policy=policy))
+    if args.heat_grid:
+        heat_grid(batch, policy)
+        return
+
+    # all five mechanisms in one vmapped sweep (single compile)
+    grid = [SimConfig(mech=MechanismConfig(kind=kind), policy=policy)
+            for kind in MECHS]
+    results = dict(zip(MECHS, sweep(batch, grid)))
 
     base = results["base"]
     f = rltl_fractions(base)

@@ -3,20 +3,24 @@
 The faithful reproduction of the thesis's mechanism (see DESIGN.md §2.1).
 """
 
-from repro.core.timing import (TimingParams, DDR3_1600, DDR3_1600_CC_1MS,
-                               lowered_for_duration, ms_to_cycles,
-                               ns_to_cycles, CYCLE_NS)
+from repro.core.timing import (TimingParams, TimingVec, DDR3_1600,
+                               DDR3_1600_CC_1MS, lowered_for_duration,
+                               ms_to_cycles, ns_to_cycles, CYCLE_NS)
 from repro.core.dram import DRAMConfig, DDR3_SYSTEM, NO_ROW
-from repro.core.hcrac import HCRACConfig, HCRACState
-from repro.core.simulator import (MechanismConfig, SimConfig, simulate,
-                                  weighted_speedup, default_nuat_bins,
-                                  RLTL_EDGES_MS)
+from repro.core.hcrac import HCRACConfig, HCRACParams, HCRACState
+from repro.core.simulator import (MechanismConfig, MechParams, SimConfig,
+                                  SimShape, mech_params, sim_shape, simulate,
+                                  sweep, sweep_traces, weighted_speedup,
+                                  default_nuat_bins, RLTL_EDGES_MS)
 from repro.core import charge_model, energy, rltl, traces
 
 __all__ = [
-    "TimingParams", "DDR3_1600", "DDR3_1600_CC_1MS", "lowered_for_duration",
-    "ms_to_cycles", "ns_to_cycles", "CYCLE_NS", "DRAMConfig", "DDR3_SYSTEM",
-    "NO_ROW", "HCRACConfig", "HCRACState", "MechanismConfig", "SimConfig",
-    "simulate", "weighted_speedup", "default_nuat_bins", "RLTL_EDGES_MS",
-    "charge_model", "energy", "rltl", "traces",
+    "TimingParams", "TimingVec", "DDR3_1600", "DDR3_1600_CC_1MS",
+    "lowered_for_duration", "ms_to_cycles", "ns_to_cycles", "CYCLE_NS",
+    "DRAMConfig", "DDR3_SYSTEM", "NO_ROW", "HCRACConfig", "HCRACParams",
+    "HCRACState", "MechanismConfig", "MechParams", "SimConfig", "SimShape",
+    "mech_params", "sim_shape", "simulate", "sweep", "sweep_traces",
+    "weighted_speedup",
+    "default_nuat_bins", "RLTL_EDGES_MS", "charge_model", "energy", "rltl",
+    "traces",
 ]

@@ -47,20 +47,22 @@ class DRAMConfig:
 DDR3_SYSTEM = DRAMConfig()
 
 
-def time_since_refresh(cfg: DRAMConfig, timing: TimingParams, row, t):
+def time_since_refresh(cfg: DRAMConfig, timing, row, t):
     """Cycles since row ``row``'s group was last refreshed, at cycle ``t``.
 
     Closed form from the rolling-refresh schedule; always in
-    ``[0, retention)``.
+    ``[0, retention)``.  ``timing`` may be a static ``TimingParams`` or a
+    traced params pytree with the same field names (DESIGN.md §4).
     """
-    phase = jnp.mod(row, timing.n_refresh_groups) * jnp.int32(timing.tREFI)
-    return jnp.mod(t - phase, jnp.int32(timing.retention_cycles))
+    groups = jnp.asarray(timing.n_refresh_groups, jnp.int32)
+    phase = jnp.mod(row, groups) * jnp.asarray(timing.tREFI, jnp.int32)
+    return jnp.mod(t - phase, jnp.asarray(timing.retention_cycles, jnp.int32))
 
 
-def refresh_adjust(timing: TimingParams, t):
+def refresh_adjust(timing, t):
     """Earliest cycle >= t at which a bank command may issue, accounting for
     the all-bank refresh that occupies the first ``tRFC`` cycles of every
     ``tREFI`` window."""
-    r = jnp.mod(t, jnp.int32(timing.tREFI))
+    r = jnp.mod(t, jnp.asarray(timing.tREFI, jnp.int32))
     busy = r < timing.tRFC
-    return jnp.where(busy, t + (jnp.int32(timing.tRFC) - r), t)
+    return jnp.where(busy, t + (jnp.asarray(timing.tRFC, jnp.int32) - r), t)

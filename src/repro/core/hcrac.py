@@ -27,6 +27,17 @@ performance difference between the two is one of our reproduced claims
 
 All state lives in small arrays, so the structure ``vmap``s across
 channels / configurations and runs inside ``lax.scan`` simulator steps.
+
+Static shape vs traced params (DESIGN.md §4): every operation takes an
+``HCRACConfig`` — the *static* part, fixing array shapes (``n_sets`` /
+``n_ways``) and the expiry flavour — plus an optional ``HCRACParams``
+pytree of *traced* values (active set count, caching duration, sweep
+period).  When ``params`` is given, ``cfg.n_sets`` only bounds the array
+shape and ``params.n_sets`` does the addressing, so HCRACs of different
+capacities share one compiled program: a capacity-``k`` table lives in the
+first ``k / n_ways`` sets of the padded array (sets beyond the active
+count are never addressed — modular indexing is the active-entry mask)
+and a whole capacity sweep ``vmap``s over stacked params.
 """
 
 from __future__ import annotations
@@ -63,6 +74,26 @@ class HCRACState(NamedTuple):
     lru: jnp.ndarray      # [sets, ways] int32 last-touch cycle (LRU policy)
 
 
+class HCRACParams(NamedTuple):
+    """Traced (vmappable) HCRAC parameters; see module docstring.
+
+    ``n_sets`` is the *active* set count — it must not exceed the static
+    ``cfg.n_sets`` that sized the state arrays.
+    """
+    n_sets: jnp.ndarray          # int32 active sets (capacity / n_ways)
+    caching_cycles: jnp.ndarray  # int32 caching duration C
+    sweep_period: jnp.ndarray    # int32 C / n_entries (IIC step)
+
+
+def params_of(cfg: HCRACConfig) -> HCRACParams:
+    """The traced-params view of a concrete config."""
+    return HCRACParams(
+        n_sets=jnp.int32(cfg.n_sets),
+        caching_cycles=jnp.int32(cfg.caching_cycles),
+        sweep_period=jnp.int32(cfg.sweep_period),
+    )
+
+
 def init(cfg: HCRACConfig) -> HCRACState:
     shape = (cfg.n_sets, cfg.n_ways)
     return HCRACState(
@@ -72,53 +103,60 @@ def init(cfg: HCRACConfig) -> HCRACState:
     )
 
 
-def _slot_phase(cfg: HCRACConfig, set_idx, way_idx):
+def _slot_phase(cfg: HCRACConfig, p: HCRACParams, set_idx, way_idx):
     """Absolute-cycle phase of the IIC/EC sweep for each physical slot."""
     slot = set_idx * cfg.n_ways + way_idx
-    return (slot + 1) * cfg.sweep_period
+    return (slot + 1) * p.sweep_period
 
 
-def _alive(cfg: HCRACConfig, set_idx, itime, t):
+def _alive(cfg: HCRACConfig, set_idx, itime, t, params: HCRACParams = None):
     """Whether entries inserted at ``itime`` are still valid at cycle ``t``."""
+    p = params if params is not None else params_of(cfg)
     ways = jnp.arange(cfg.n_ways, dtype=jnp.int32)
     if cfg.exact_expiry:
-        return (t - itime) <= cfg.caching_cycles
-    phase = _slot_phase(cfg, set_idx, ways)
-    c = jnp.int32(cfg.caching_cycles)
+        return (t - itime) <= p.caching_cycles
+    phase = _slot_phase(cfg, p, set_idx, ways)
+    c = p.caching_cycles
     # Same sweep window <=> no invalidation of this slot in (itime, t].
     return (t - phase) // c == (itime - phase) // c
 
 
-def lookup(cfg: HCRACConfig, st: HCRACState, gid, t):
+def lookup(cfg: HCRACConfig, st: HCRACState, gid, t, enable=True,
+           params: HCRACParams = None):
     """Look up global row id ``gid`` at cycle ``t``.
 
     Returns ``(hit, new_state)``; a hit refreshes the entry's LRU stamp
     (and — since the row is about to be activated, i.e. recharged — its
     insertion time, matching the controller re-arming the entry).
+    ``enable`` masks the LRU side effect (the returned ``hit`` is
+    unmasked — callers combine it with their own predicates).
     """
-    set_idx = jnp.mod(gid, cfg.n_sets).astype(jnp.int32)
+    p = params if params is not None else params_of(cfg)
+    set_idx = jnp.mod(gid, p.n_sets).astype(jnp.int32)
     row_tags = st.tags[set_idx]            # [ways]
     row_itime = st.itime[set_idx]
-    valid = (row_tags != NO_TAG) & _alive(cfg, set_idx, row_itime, t)
+    valid = (row_tags != NO_TAG) & _alive(cfg, set_idx, row_itime, t, p)
     match = valid & (row_tags == gid)
     hit = jnp.any(match)
-    new_lru = jnp.where(match, t, st.lru[set_idx])
+    new_lru = jnp.where(match & jnp.asarray(enable), t, st.lru[set_idx])
     st = st._replace(lru=st.lru.at[set_idx].set(new_lru))
     return hit, st
 
 
-def insert(cfg: HCRACConfig, st: HCRACState, gid, t, enable=True):
+def insert(cfg: HCRACConfig, st: HCRACState, gid, t, enable=True,
+           params: HCRACParams = None):
     """Insert global row id ``gid`` at cycle ``t`` (called on PRE).
 
     Victim selection: an already-matching way (refresh in place), else an
     invalid/expired way, else the LRU way.  ``enable`` masks the update
     (so the call is safe inside ``lax.scan`` branches).
     """
-    set_idx = jnp.mod(gid, cfg.n_sets).astype(jnp.int32)
+    p = params if params is not None else params_of(cfg)
+    set_idx = jnp.mod(gid, p.n_sets).astype(jnp.int32)
     row_tags = st.tags[set_idx]
     row_itime = st.itime[set_idx]
     row_lru = st.lru[set_idx]
-    valid = (row_tags != NO_TAG) & _alive(cfg, set_idx, row_itime, t)
+    valid = (row_tags != NO_TAG) & _alive(cfg, set_idx, row_itime, t, p)
     match = valid & (row_tags == gid)
 
     # Priority: match > first invalid > LRU.
@@ -141,6 +179,16 @@ def occupancy(cfg: HCRACConfig, st: HCRACState, t) -> jnp.ndarray:
     sets = jnp.arange(cfg.n_sets, dtype=jnp.int32)[:, None]
     valid = (st.tags != NO_TAG) & _alive(cfg, sets, st.itime, t)
     return jnp.mean(valid.astype(jnp.float32))
+
+
+def padded_shape(cfg: HCRACConfig, n_sets_max: int) -> HCRACConfig:
+    """The static shape carrier for a capacity sweep: same ways / expiry,
+    arrays sized for ``n_sets_max`` sets.  Traced fields are zeroed so that
+    configs differing only in capacity / duration hash to one shape (and
+    therefore one XLA compilation)."""
+    assert n_sets_max >= cfg.n_sets
+    return dataclasses.replace(cfg, n_entries=n_sets_max * cfg.n_ways,
+                               caching_cycles=0)
 
 
 def storage_bits(cfg: HCRACConfig, n_ranks=1, n_banks=8, n_rows=65536) -> int:

@@ -20,6 +20,16 @@ One ``lax.scan`` step = one memory request, end to end:
 Stats (hit rates, RLTL histograms, latency, per-core end times, energy
 counters) accumulate in-scan with warm-up masking.
 
+**Batched experiment engine** (DESIGN.md §4): a configuration is split
+into a static *shape* (``SimShape`` — array sizes, HCRAC geometry, MSHR
+depth) and a traced *params* pytree (``MechParams`` — every timing value,
+the mechanism enable flags, HCRAC capacity/duration, NUAT bins).  The
+scan body takes params as data, so mechanism selection is a ``where`` on
+enable flags rather than Python branching, one compiled program serves
+all five mechanism kinds, and ``sweep()`` evaluates a whole evaluation
+grid by ``vmap``-ing over stacked params — one XLA compilation for the
+entire grid, sharded across devices when more than one is available.
+
 Approximations vs. Ramulator (documented in DESIGN.md): FR-FCFS is
 approximated by per-bank in-order service with dynamic multi-core
 interleave + closed-row queue-hit lookahead; tRRD/tFAW are not enforced
@@ -30,7 +40,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -39,7 +49,9 @@ import numpy as np
 from repro.core import hcrac as hcrac_lib
 from repro.core.dram import (DRAMConfig, DDR3_SYSTEM, NO_ROW, refresh_adjust,
                              time_since_refresh)
-from repro.core.timing import (TimingParams, DDR3_1600, ms_to_cycles)
+from repro.core import timing as timing_lib
+from repro.core.timing import (TimingParams, TimingVec, DDR3_1600,
+                               ms_to_cycles)
 from repro.core import charge_model
 from repro.core.traces import TraceBatch
 
@@ -102,6 +114,83 @@ class SimConfig:
         assert self.policy in ("open", "closed")
 
 
+# --------------------------------------------------------------------------
+# Static shape vs traced params (the batched experiment engine's core split)
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SimShape:
+    """The static half of a configuration: everything that determines array
+    shapes or trace structure.  Two configs with equal ``SimShape`` (and
+    equal trace/step shapes) share one XLA compilation; all remaining
+    knobs live in ``MechParams`` and are traced."""
+    dram: DRAMConfig
+    hcrac: hcrac_lib.HCRACConfig  # shape carrier: max sets / ways / expiry
+    mshr: int
+    n_nuat_bins: int
+
+
+class MechParams(NamedTuple):
+    """The traced half: one pytree of int32/bool scalars (plus the padded
+    NUAT bin arrays).  ``sweep()`` stacks these along a leading grid axis
+    and ``vmap``s the simulator over it."""
+    timing: TimingVec            # full DDR3 timing set, traced
+    low_tRCD: jnp.ndarray        # lowered timings (ChargeCache hit / LL-DRAM)
+    low_tRAS: jnp.ndarray
+    cc_enable: jnp.ndarray       # bool: HCRAC insert/lookup path active
+    nuat_enable: jnp.ndarray     # bool: NUAT bin timings active
+    ll_enable: jnp.ndarray       # bool: always-lowered (LL-DRAM)
+    closed_policy: jnp.ndarray   # bool: closed-row policy (auto-precharge)
+    hcrac: hcrac_lib.HCRACParams
+    nuat_edge: jnp.ndarray       # [n_nuat_bins] upper edges (0 = inert pad)
+    nuat_rcd: jnp.ndarray        # [n_nuat_bins]
+    nuat_ras: jnp.ndarray        # [n_nuat_bins]
+
+
+def sim_shape(cfg: SimConfig, n_sets_max: int | None = None,
+              n_nuat_bins: int | None = None) -> SimShape:
+    """The static shape of ``cfg``; ``n_sets_max``/``n_nuat_bins`` pad the
+    HCRAC / NUAT arrays so a whole grid shares one shape."""
+    h = cfg.mech.hcrac
+    return SimShape(
+        dram=cfg.dram,
+        hcrac=hcrac_lib.padded_shape(h, n_sets_max or h.n_sets),
+        mshr=cfg.mshr,
+        n_nuat_bins=(len(cfg.mech.nuat_bins) if n_nuat_bins is None
+                     else n_nuat_bins),
+    )
+
+
+def mech_params(cfg: SimConfig, n_nuat_bins: int | None = None) -> MechParams:
+    """Flatten ``cfg``'s numeric content into the traced params pytree.
+
+    NUAT bins are padded to ``n_nuat_bins`` with zero edges; since
+    time-since-refresh is always >= 0, a zero-edge bin never matches, so
+    padding is behaviour-neutral (bitwise).
+    """
+    mech = cfg.mech
+    bins = list(mech.nuat_bins)
+    nb = len(bins) if n_nuat_bins is None else n_nuat_bins
+    assert nb >= len(bins), (nb, len(bins))
+    pad = nb - len(bins)
+    edges = [e for e, _, _ in bins] + [0] * pad
+    rcds = [r for _, r, _ in bins] + [cfg.timing.tRCD] * pad
+    rass = [s for _, _, s in bins] + [cfg.timing.tRAS] * pad
+    return MechParams(
+        timing=timing_lib.traced(cfg.timing),
+        low_tRCD=jnp.int32(mech.lowered.tRCD),
+        low_tRAS=jnp.int32(mech.lowered.tRAS),
+        cc_enable=jnp.bool_(mech.uses_cc),
+        nuat_enable=jnp.bool_(mech.uses_nuat),
+        ll_enable=jnp.bool_(mech.kind == "lldram"),
+        closed_policy=jnp.bool_(cfg.policy == "closed"),
+        hcrac=hcrac_lib.params_of(mech.hcrac),
+        nuat_edge=jnp.asarray(edges, jnp.int32),
+        nuat_rcd=jnp.asarray(rcds, jnp.int32),
+        nuat_ras=jnp.asarray(rass, jnp.int32),
+    )
+
+
 class SimState(NamedTuple):
     # per-core issue model
     ptr: jnp.ndarray           # [C] next request index
@@ -148,19 +237,19 @@ class Events(NamedTuple):
     pre2_t: jnp.ndarray
 
 
-def _init_state(cfg: SimConfig, n_cores: int, max_len: int) -> SimState:
-    nb = cfg.dram.banks_total
-    nch = cfg.dram.n_channels
+def _init_state(shape: SimShape, n_cores: int, max_len: int) -> SimState:
+    nb = shape.dram.banks_total
+    nch = shape.dram.n_channels
     z = lambda *s: jnp.zeros(s, jnp.int32)
     stats = {k: jnp.int32(0) for k in STAT_KEYS}
     return SimState(
         ptr=z(n_cores), last_issue=z(n_cores), last_complete=z(n_cores),
-        mshr_ring=z(n_cores, cfg.mshr), ring_idx=z(n_cores),
+        mshr_ring=z(n_cores, shape.mshr), ring_idx=z(n_cores),
         core_end=z(n_cores),
         open_row=jnp.full((nb,), NO_ROW, jnp.int32),
         ready_act=z(nb), ready_rdwr=z(nb), ready_pre=z(nb),
         cmd_bus_free=z(nch), data_bus_free=z(nch),
-        hcrac=hcrac_lib.init(cfg.mech.hcrac),
+        hcrac=hcrac_lib.init(shape.hcrac),
         stats=stats,
     )
 
@@ -169,12 +258,17 @@ def _acc(stats, key, val):
     stats[key] = stats[key] + jnp.asarray(val, jnp.int32)
 
 
-def _service(cfg: SimConfig, st: SimState, t_arr, bank, row, is_write,
-             next_same, measure):
-    """Serve one request; returns (new bank/bus/hcrac state pieces, done)."""
-    T = cfg.timing
-    mech = cfg.mech
-    dram = cfg.dram
+def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
+             is_write, next_same, measure, enable):
+    """Serve one request; returns (new bank/bus/hcrac state pieces, done).
+
+    ``enable`` marks a live scan step: padded no-op steps (see ``_run``)
+    still trace through here, but their state writes are discarded by the
+    caller and their events are masked out below.
+    """
+    T = p.timing
+    dram = shape.dram
+    hshape = shape.hcrac
     ch = dram.channel_of(bank)
     stats = dict(st.stats)
 
@@ -187,10 +281,9 @@ def _service(cfg: SimConfig, st: SimState, t_arr, bank, row, is_write,
     # --- conflict path: PRE the open row (insert it into the HCRAC) ------
     t_pre = refresh_adjust(T, jnp.maximum(t0, st.ready_pre[bank]))
     gid_old = dram.global_row_id(bank, jnp.where(is_conflict, openr, 0))
-    hc = st.hcrac
-    if mech.uses_cc:
-        hc = hcrac_lib.insert(mech.hcrac, hc, gid_old, t_pre,
-                              enable=is_conflict)
+    hc = hcrac_lib.insert(hshape, st.hcrac, gid_old, t_pre,
+                          enable=is_conflict & p.cc_enable & enable,
+                          params=p.hcrac)
 
     # --- ACT ---------------------------------------------------------------
     t_act = jnp.where(
@@ -200,30 +293,26 @@ def _service(cfg: SimConfig, st: SimState, t_arr, bank, row, is_write,
     needs_act = ~is_hit
 
     gid = dram.global_row_id(bank, row)
-    if mech.uses_cc:
-        cc_hit, hc = hcrac_lib.lookup(mech.hcrac, hc, gid, t_act)
-        cc_hit = cc_hit & needs_act
-    else:
-        cc_hit = jnp.bool_(False)
+    cc_hit, hc = hcrac_lib.lookup(hshape, hc, gid, t_act, enable=enable,
+                                  params=p.hcrac)
+    cc_hit = cc_hit & needs_act & p.cc_enable
 
-    rcd = jnp.int32(T.tRCD)
-    ras = jnp.int32(T.tRAS)
-    if mech.kind == "lldram":
-        rcd = jnp.int32(mech.lowered.tRCD)
-        ras = jnp.int32(mech.lowered.tRAS)
-    if mech.uses_cc:
-        rcd = jnp.where(cc_hit, mech.lowered.tRCD, rcd)
-        ras = jnp.where(cc_hit, mech.lowered.tRAS, ras)
+    # mechanism timing selection, all data-driven (same ordering as the
+    # original Python branches: LL-DRAM base, then ChargeCache hit
+    # override, then NUAT minimum):
+    rcd = jnp.where(p.ll_enable, p.low_tRCD, T.tRCD)
+    ras = jnp.where(p.ll_enable, p.low_tRAS, T.tRAS)
+    rcd = jnp.where(cc_hit, p.low_tRCD, rcd)
+    ras = jnp.where(cc_hit, p.low_tRAS, ras)
     tsr = time_since_refresh(dram, T, row, t_act)
-    if mech.uses_nuat:
-        n_rcd = jnp.int32(T.tRCD)
-        n_ras = jnp.int32(T.tRAS)
-        for edge, brcd, bras in reversed(mech.nuat_bins):
-            inbin = tsr < edge
-            n_rcd = jnp.where(inbin, brcd, n_rcd)
-            n_ras = jnp.where(inbin, bras, n_ras)
-        rcd = jnp.minimum(rcd, n_rcd)
-        ras = jnp.minimum(ras, n_ras)
+    n_rcd = T.tRCD
+    n_ras = T.tRAS
+    for i in range(shape.n_nuat_bins - 1, -1, -1):
+        inbin = tsr < p.nuat_edge[i]
+        n_rcd = jnp.where(inbin, p.nuat_rcd[i], n_rcd)
+        n_ras = jnp.where(inbin, p.nuat_ras[i], n_ras)
+    rcd = jnp.where(p.nuat_enable, jnp.minimum(rcd, n_rcd), rcd)
+    ras = jnp.where(p.nuat_enable, jnp.minimum(ras, n_ras), ras)
     lowered_used = needs_act & ((rcd < T.tRCD) | (ras < T.tRAS))
 
     # --- READ / WRITE -------------------------------------------------------
@@ -243,10 +332,11 @@ def _service(cfg: SimConfig, st: SimState, t_arr, bank, row, is_write,
 
     # closed-row policy: auto-precharge unless the next queued request from
     # this core hits the same row (queue-hit lookahead).
-    auto_pre = (cfg.policy == "closed") & ~next_same
+    auto_pre = p.closed_policy & ~next_same
     t_autopre = new_ready_pre
-    if mech.uses_cc:
-        hc = hcrac_lib.insert(mech.hcrac, hc, gid, t_autopre, enable=auto_pre)
+    hc = hcrac_lib.insert(hshape, hc, gid, t_autopre,
+                          enable=auto_pre & p.cc_enable & enable,
+                          params=p.hcrac)
     new_open = jnp.where(auto_pre, NO_ROW, row)
     new_ready_act = jnp.where(
         auto_pre, t_autopre + T.tRP,
@@ -263,9 +353,8 @@ def _service(cfg: SimConfig, st: SimState, t_arr, bank, row, is_write,
     _acc(stats, "lat_sum", m * (done - t_arr))
     _acc(stats, "acts", m * needs_act)
     _acc(stats, "acts_lowered", m * lowered_used)
-    if mech.uses_cc:
-        _acc(stats, "hcrac_lookups", m * needs_act)
-        _acc(stats, "hcrac_hits", m * cc_hit)
+    _acc(stats, "hcrac_lookups", m * (needs_act & p.cc_enable))
+    _acc(stats, "hcrac_hits", m * cc_hit)
     _acc(stats, "row_hits", m * is_hit)
     _acc(stats, "row_closed", m * is_closed)
     _acc(stats, "row_conflicts", m * is_conflict)
@@ -282,26 +371,37 @@ def _service(cfg: SimConfig, st: SimState, t_arr, bank, row, is_write,
         act_gid=jnp.where(needs_act & measure, gid, -1),
         act_t=t_act,
         act_ref8=ref8,
-        pre1_gid=jnp.where(is_conflict, gid_old, -1),
+        pre1_gid=jnp.where(is_conflict & enable, gid_old, -1),
         pre1_t=t_pre,
-        pre2_gid=jnp.where(auto_pre, gid, -1),
+        pre2_gid=jnp.where(auto_pre & enable, gid, -1),
         pre2_t=t_autopre,
     )
 
+    # masked writes: a disabled (padded no-op) step must leave every state
+    # word untouched.  Masking at the written element keeps the cost O(1)
+    # per step — a whole-carry select would copy the HCRAC arrays each
+    # step, which dominates the scan on the CPU backend (measured).
+    w = lambda new, old: jnp.where(enable, new, old)
     new_st = st._replace(
-        open_row=st.open_row.at[bank].set(new_open),
-        ready_act=st.ready_act.at[bank].set(new_ready_act),
-        ready_rdwr=st.ready_rdwr.at[bank].set(new_ready_rdwr),
-        ready_pre=st.ready_pre.at[bank].set(new_ready_pre),
-        cmd_bus_free=st.cmd_bus_free.at[ch].set(new_cmd_free),
-        data_bus_free=st.data_bus_free.at[ch].set(new_data_free),
+        open_row=st.open_row.at[bank].set(w(new_open, openr)),
+        ready_act=st.ready_act.at[bank].set(
+            w(new_ready_act, st.ready_act[bank])),
+        ready_rdwr=st.ready_rdwr.at[bank].set(
+            w(new_ready_rdwr, st.ready_rdwr[bank])),
+        ready_pre=st.ready_pre.at[bank].set(
+            w(new_ready_pre, st.ready_pre[bank])),
+        cmd_bus_free=st.cmd_bus_free.at[ch].set(
+            w(new_cmd_free, st.cmd_bus_free[ch])),
+        data_bus_free=st.data_bus_free.at[ch].set(
+            w(new_data_free, st.data_bus_free[ch])),
         hcrac=hc,
         stats=stats,
     )
     return new_st, done, events
 
 
-def _make_step(cfg: SimConfig, trace: dict, warmup_steps: int):
+def _make_step(shape: SimShape, p: MechParams, trace: dict, warmup_steps,
+               collect_events: bool = True):
     gap = trace["gap"]
     bank = trace["bank"]
     row = trace["row"]
@@ -324,43 +424,89 @@ def _make_step(cfg: SimConfig, trace: dict, warmup_steps: int):
         c = jnp.argmin(issue).astype(jnp.int32)
         t_arr = issue[c]
 
-        measure = step_idx >= warmup_steps
-        st2, done, events = _service(cfg, st, t_arr, bank[c, ptr_c[c]],
+        # a step with every core exhausted is a padded no-op (see _run):
+        # it still traces through _service, but all its state writes are
+        # discarded below and its events are masked out.
+        alive = t_arr < INF
+        measure = (step_idx >= warmup_steps) & alive
+        st2, done, events = _service(shape, p, st, t_arr, bank[c, ptr_c[c]],
                                      row[c, ptr_c[c]], is_write[c, ptr_c[c]],
-                                     next_same[c, ptr_c[c]], measure)
+                                     next_same[c, ptr_c[c]], measure, alive)
 
-        # 2. core bookkeeping
+        # 2. core bookkeeping (masked: a dead step must not advance cores)
+        w = lambda new, old: jnp.where(alive, new, old)
         st3 = st2._replace(
-            ptr=st2.ptr.at[c].add(1),
-            last_issue=st2.last_issue.at[c].set(t_arr),
-            last_complete=st2.last_complete.at[c].set(done),
-            mshr_ring=st2.mshr_ring.at[c, st2.ring_idx[c]].set(done),
+            ptr=st2.ptr.at[c].add(alive.astype(jnp.int32)),
+            last_issue=st2.last_issue.at[c].set(w(t_arr, st2.last_issue[c])),
+            last_complete=st2.last_complete.at[c].set(
+                w(done, st2.last_complete[c])),
+            mshr_ring=st2.mshr_ring.at[c, st2.ring_idx[c]].set(
+                w(done, st2.mshr_ring[c, st2.ring_idx[c]])),
             ring_idx=st2.ring_idx.at[c].set(
-                (st2.ring_idx[c] + 1) % cfg.mshr),
+                w((st2.ring_idx[c] + 1) % shape.mshr, st2.ring_idx[c])),
             core_end=st2.core_end.at[c].set(
-                jnp.maximum(st2.core_end[c], done)),
+                w(jnp.maximum(st2.core_end[c], done), st2.core_end[c])),
         )
-        return st3, events
+        return st3, (events if collect_events else None)
 
     return step
 
 
-@functools.partial(jax.jit, static_argnums=(0, 2, 3))
-def _run(cfg: SimConfig, trace: dict, n_steps: int, warmup_steps: int):
-    """Returns (stats, core_end, events).
+def _run_impl(shape: SimShape, params: MechParams, trace: dict,
+              warmup_steps, n_steps: int, collect_events: bool = True):
+    n_cores, L = trace["gap"].shape
+    st = _init_state(shape, n_cores, L)
+    step = _make_step(shape, params, trace, warmup_steps, collect_events)
+    st, events = jax.lax.scan(step, st, jnp.arange(n_steps, dtype=jnp.int32))
+    return st.stats, st.core_end, events
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def _run(shape: SimShape, params: MechParams, trace: dict, warmup_steps,
+         n_steps: int, collect_events: bool = True):
+    """Returns (stats, core_end, events) for one configuration.
 
     Perf note: the scan carry must stay small and must never be gathered
     from with data-dependent indices — a dynamic read of a large in-place
     carry buffer forces a full-array copy per step on the CPU backend
     (~300x slowdown, measured).  Row-history state (for RLTL) is therefore
     emitted as per-step *events* (scan ys, written with affine indices)
-    and matched in a post-pass.
+    and matched in a post-pass; ``collect_events=False`` drops the event
+    stream entirely for consumers that don't need RLTL.
+
+    ``n_steps`` (static) may exceed the trace's request count: once every
+    core is exhausted the remaining steps are no-ops (`alive` masking in
+    ``_make_step``), which lets callers pad to a common step count so
+    differently-sized workload mixes share one compilation.
     """
-    n_cores, L = trace["gap"].shape
-    st = _init_state(cfg, n_cores, L)
-    step = _make_step(cfg, trace, warmup_steps)
-    st, events = jax.lax.scan(step, st, jnp.arange(n_steps, dtype=jnp.int32))
-    return st.stats, st.core_end, events
+    return _run_impl(shape, params, trace, warmup_steps, n_steps,
+                     collect_events)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def _run_batched(shape: SimShape, params: MechParams, trace: dict,
+                 warmup_steps, n_steps: int, collect_events: bool = True):
+    """The vmapped grid engine: ``params`` leaves carry a leading [grid]
+    axis; one compilation of the (single) scan body serves every grid
+    point."""
+    return jax.vmap(
+        lambda p: _run_impl(shape, p, trace, warmup_steps, n_steps,
+                            collect_events))(params)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def _run_grid(shape: SimShape, params: MechParams, traces: dict,
+              warmups, n_steps: int, collect_events: bool = False):
+    """The full grid engine: nested vmap over [traces] x [params].
+
+    ``traces`` leaves carry a leading [batch] axis, ``warmups`` is [batch],
+    ``params`` leaves carry a leading [grid] axis; the single compiled
+    scan body serves every (trace, config) pair."""
+    def per_trace(trace, warmup):
+        return jax.vmap(
+            lambda p: _run_impl(shape, p, trace, warmup, n_steps,
+                                collect_events))(params)
+    return jax.vmap(per_trace)(traces, warmups)
 
 
 def _rltl_post_pass(events: Events):
@@ -401,9 +547,8 @@ def _rltl_post_pass(events: Events):
     return hist, int(valid.sum())
 
 
-def simulate(batch: TraceBatch, cfg: SimConfig = SimConfig()) -> dict:
-    """Run the simulator on a trace batch; returns a python stats dict."""
-    trace = {
+def _device_trace(batch: TraceBatch) -> dict:
+    return {
         "gap": jnp.asarray(batch.gap, jnp.int32),
         "bank": jnp.asarray(batch.bank, jnp.int32),
         "row": jnp.asarray(batch.row, jnp.int32),
@@ -412,13 +557,16 @@ def simulate(batch: TraceBatch, cfg: SimConfig = SimConfig()) -> dict:
         "next_same": jnp.asarray(batch.next_same),
         "length": jnp.asarray(batch.length, jnp.int32),
     }
-    n_steps = int(batch.length.sum())
-    # horizon guard: int32 cycle arithmetic
-    assert n_steps < 2**24, "trace too long for the int32 cycle horizon"
-    warmup = int(cfg.warmup_frac * n_steps)
-    raw_stats, core_end, events = _run(cfg, trace, n_steps, warmup)
+
+
+def _finalize(raw_stats: dict, core_end, events: Events | None,
+              batch: TraceBatch) -> dict:
+    """Host-side post-processing shared by ``simulate`` and ``sweep``."""
     stats = {k: np.asarray(v) for k, v in raw_stats.items()}
-    hist, rltl_total = _rltl_post_pass(events)
+    if events is not None:
+        hist, rltl_total = _rltl_post_pass(events)
+    else:
+        hist, rltl_total = None, None  # run was collected without events
     stats["rltl_hist"] = hist
     stats["rltl_total"] = rltl_total
     stats["core_end"] = np.asarray(core_end)
@@ -434,6 +582,168 @@ def simulate(batch: TraceBatch, cfg: SimConfig = SimConfig()) -> dict:
     s["row_hit_rate"] = float(s["row_hits"]) / max(int(s["n_req"]), 1)
     s["rmpkc"] = 1000.0 * float(s["acts"]) / max(s["total_cycles"], 1)
     return stats
+
+
+def simulate(batch: TraceBatch, cfg: SimConfig = SimConfig()) -> dict:
+    """Run the simulator on a trace batch; returns a python stats dict.
+
+    All numeric configuration is passed as traced data (``mech_params``),
+    so configs sharing a ``SimShape`` — any mix of mechanism kinds, timing
+    values or caching durations — reuse one compilation.
+    """
+    trace = _device_trace(batch)
+    n_steps = int(batch.length.sum())
+    # horizon guard: int32 cycle arithmetic
+    assert n_steps < 2**24, "trace too long for the int32 cycle horizon"
+    warmup = jnp.int32(int(cfg.warmup_frac * n_steps))
+    raw_stats, core_end, events = _run(sim_shape(cfg), mech_params(cfg),
+                                       trace, warmup, n_steps)
+    return _finalize(raw_stats, core_end, events, batch)
+
+
+def _shard_grid(stacked: MechParams, n_grid: int):
+    """Lay the stacked grid axis out across the available devices.
+
+    Pads the axis to a device multiple (replicating the last entry) and
+    device_puts each leaf with a grid-axis ``NamedSharding`` so the jitted
+    vmapped run executes one shard per device.  A no-op on one device.
+    Returns ``(stacked, padded_n)``.
+    """
+    devs = jax.devices()
+    if len(devs) <= 1:
+        return stacked, n_grid
+    pad = (-n_grid) % len(devs)
+    if pad:
+        stacked = jax.tree_util.tree_map(
+            lambda x: jnp.concatenate(
+                [x, jnp.repeat(x[-1:], pad, axis=0)]), stacked)
+    mesh = jax.sharding.Mesh(np.asarray(devs), ("grid",))
+    sharding = jax.sharding.NamedSharding(
+        mesh, jax.sharding.PartitionSpec("grid"))
+    stacked = jax.tree_util.tree_map(
+        lambda x: jax.device_put(x, sharding), stacked)
+    return stacked, n_grid + pad
+
+
+def _grid_shape_and_params(grid: Sequence[SimConfig]):
+    """Validate grid shape compatibility; return the unified static shape
+    and the stacked traced params."""
+    c0 = grid[0]
+    for cfg in grid:
+        assert cfg.dram == c0.dram, "sweep grid must share DRAM geometry"
+        assert cfg.mshr == c0.mshr, "sweep grid must share MSHR depth"
+        assert cfg.warmup_frac == c0.warmup_frac
+        assert cfg.mech.hcrac.n_ways == c0.mech.hcrac.n_ways
+        assert cfg.mech.hcrac.exact_expiry == c0.mech.hcrac.exact_expiry
+    n_sets_max = max(cfg.mech.hcrac.n_sets for cfg in grid)
+    n_bins = max(len(cfg.mech.nuat_bins) for cfg in grid)
+    shape = sim_shape(c0, n_sets_max=n_sets_max, n_nuat_bins=n_bins)
+    stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[mech_params(cfg, n_nuat_bins=n_bins) for cfg in grid])
+    return shape, stacked
+
+
+def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
+          pad_steps: bool = False, rltl: bool = True) -> list[dict]:
+    """Evaluate every configuration in ``grid`` on ``batch`` in one call.
+
+    The whole grid — any mix of the five mechanism kinds, HCRAC
+    capacities, caching durations, timing sets — is flattened to stacked
+    ``MechParams`` and evaluated by one ``vmap``-ed, jit-compiled scan
+    (sharded across devices when several are available).  Results are
+    bitwise identical to per-config ``simulate()`` calls.
+
+    ``pad_steps=True`` pads the scan length to the trace *capacity*
+    (cores x padded length) instead of the exact request count; padded
+    steps are no-ops, so stats are unchanged, but every same-shape trace
+    set then shares a single compilation — the compile-once/run-many mode
+    the benchmarks use.  ``rltl=False`` skips event collection (the
+    stats dicts then carry ``rltl_hist=None``) — substantially faster and
+    smaller when the RLTL histogram isn't needed.
+    """
+    grid = list(grid)
+    assert grid, "empty sweep grid"
+    shape, stacked = _grid_shape_and_params(grid)
+
+    trace = _device_trace(batch)
+    n_req = int(batch.length.sum())
+    assert n_req < 2**24, "trace too long for the int32 cycle horizon"
+    n_cores, max_len = batch.gap.shape
+    n_steps = n_cores * max_len if pad_steps else n_req
+    warmup = jnp.int32(int(grid[0].warmup_frac * n_req))
+
+    n_grid = len(grid)
+    stacked, _ = _shard_grid(stacked, n_grid)
+    raw_stats, core_end, events = _run_batched(shape, stacked, trace,
+                                               warmup, n_steps, rltl)
+
+    # one device->host transfer for the whole grid, then per-point views
+    stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}
+    core_np = np.asarray(core_end)
+    events_np = (Events(*(np.asarray(e) for e in events))
+                 if events is not None else None)
+    return [
+        _finalize({k: v[g] for k, v in stats_np.items()}, core_np[g],
+                  Events(*(e[g] for e in events_np))
+                  if events_np is not None else None, batch)
+        for g in range(n_grid)
+    ]
+
+
+def sweep_traces(batches: Sequence[TraceBatch], grid: Sequence[SimConfig],
+                 rltl: bool = False) -> list[list[dict]]:
+    """Evaluate a config grid over *several* trace batches in one call.
+
+    The full evaluation matrix — every (workload batch, configuration)
+    pair — runs through one nested-vmap compilation of the scan body:
+    the outer axis batches the traces, the inner axis the mechanism
+    params.  All batches must share array shapes (cores x padded length);
+    the scan length is padded to the trace capacity, so differing request
+    counts are handled by no-op steps and per-batch traced warm-up.
+
+    Returns ``out[b][g]``: stats for batch ``b`` under config ``g``,
+    bitwise identical to ``simulate(batches[b], grid[g])`` (modulo the
+    RLTL histogram, which is only collected when ``rltl=True``).
+    """
+    batches = list(batches)
+    grid = list(grid)
+    assert batches and grid, "empty sweep"
+    tshape = batches[0].gap.shape
+    for b in batches:
+        assert b.gap.shape == tshape, \
+            "sweep_traces requires same-shape trace batches"
+    shape, stacked = _grid_shape_and_params(grid)
+
+    traces = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[_device_trace(b) for b in batches])
+    n_cores, max_len = tshape
+    n_steps = n_cores * max_len
+    assert n_steps < 2**24, "trace too long for the int32 cycle horizon"
+    warmups = jnp.asarray(
+        [int(grid[0].warmup_frac * int(b.length.sum())) for b in batches],
+        jnp.int32)
+
+    n_batch = len(batches)
+    (traces, warmups), _ = _shard_grid((traces, warmups), n_batch)
+    raw_stats, core_end, events = _run_grid(shape, stacked, traces,
+                                            warmups, n_steps, rltl)
+
+    stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}  # [B, G]
+    core_np = np.asarray(core_end)
+    events_np = (Events(*(np.asarray(e) for e in events))
+                 if events is not None else None)
+    out = []
+    for b in range(n_batch):
+        row = []
+        for g in range(len(grid)):
+            ev = (Events(*(e[b, g] for e in events_np))
+                  if events_np is not None else None)
+            row.append(_finalize({k: v[b, g] for k, v in stats_np.items()},
+                                 core_np[b, g], ev, batches[b]))
+        out.append(row)
+    return out
 
 
 def weighted_speedup(core_end_base: np.ndarray, core_end_mech: np.ndarray,

@@ -12,6 +12,9 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import NamedTuple
+
+import jax.numpy as jnp
 
 
 CYCLE_NS = 1.25  # DDR3-1600: 800 MHz bus clock
@@ -46,6 +49,30 @@ class TimingParams:
         return dataclasses.replace(
             self, tRCD=max(1, self.tRCD - d_rcd), tRAS=max(1, self.tRAS - d_ras)
         )
+
+
+class TimingVec(NamedTuple):
+    """Traced (vmappable) view of ``TimingParams``: same field names, each
+    an int32 scalar array, so the simulator's arithmetic is identical but
+    the values are data — a whole timing sweep stacks into one ``TimingVec``
+    of ``[grid]`` arrays and compiles once (DESIGN.md §4)."""
+    tRCD: jnp.ndarray
+    tRAS: jnp.ndarray
+    tRP: jnp.ndarray
+    tCL: jnp.ndarray
+    tCWL: jnp.ndarray
+    tBL: jnp.ndarray
+    tRTP: jnp.ndarray
+    tWR: jnp.ndarray
+    tREFI: jnp.ndarray
+    tRFC: jnp.ndarray
+    n_refresh_groups: jnp.ndarray
+    retention_cycles: jnp.ndarray
+
+
+def traced(tp: TimingParams) -> TimingVec:
+    """The traced-params view of a concrete ``TimingParams``."""
+    return TimingVec(*(jnp.int32(getattr(tp, f)) for f in TimingVec._fields))
 
 
 #: Baseline DDR3-1600 timings (Table 5.1).

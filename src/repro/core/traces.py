@@ -246,6 +246,28 @@ def batch_traces(traces: list[Trace]) -> TraceBatch:
     )
 
 
+def pad_batch_to(batch: TraceBatch, max_len: int) -> TraceBatch:
+    """Zero-pad a batch's request arrays to ``max_len`` (lengths unchanged).
+
+    Padding is behaviour-neutral: the simulator treats requests past
+    ``length`` as exhausted (their issue time is +inf), so a padded batch
+    produces bitwise-identical stats while sharing array shapes — and
+    therefore one compilation — with larger batches (DESIGN.md §4).
+    """
+    c, L = batch.gap.shape
+    assert max_len >= L
+    if max_len == L:
+        return batch
+    def pad(x):
+        out = np.zeros((c, max_len), x.dtype)
+        out[:, :L] = x
+        return out
+    return TraceBatch(
+        gap=pad(batch.gap), bank=pad(batch.bank), row=pad(batch.row),
+        is_write=pad(batch.is_write), dep=pad(batch.dep),
+        next_same=pad(batch.next_same), length=batch.length)
+
+
 def single_core_batch(name: str, n_req: int, seed: int = 0,
                       dram: DRAMConfig = DDR3_SYSTEM) -> TraceBatch:
     return batch_traces([generate_trace(WORKLOAD_BY_NAME[name], n_req, seed,

@@ -1,0 +1,77 @@
+"""``hypothesis`` compatibility shim for the property tests.
+
+Prefers the real ``hypothesis`` when installed (the ``[test]`` extra in
+pyproject.toml).  On machines without it, a minimal deterministic
+fallback runs each property over a fixed-seed sample of the strategy
+space instead of skipping the module outright — weaker than real
+shrinking/coverage, but the invariants still get exercised and the
+non-property unit tests in the same modules keep running.
+
+Only the strategy combinators the test suite uses are implemented:
+``integers``, ``booleans``, ``sampled_from``, ``tuples``, ``lists``.
+"""
+
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    class _Strategies:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(values):
+            values = list(values)
+            return _Strategy(
+                lambda rng: values[int(rng.integers(0, len(values)))])
+
+        @staticmethod
+        def tuples(*ss):
+            return _Strategy(lambda rng: tuple(s.sample(rng) for s in ss))
+
+        @staticmethod
+        def lists(s, min_size=0, max_size=10):
+            return _Strategy(lambda rng: [
+                s.sample(rng)
+                for _ in range(int(rng.integers(min_size, max_size + 1)))])
+
+    st = _Strategies()
+
+    def settings(max_examples=20, **_kw):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    def given(*ss):
+        def deco(fn):
+            def wrapper():
+                n = min(getattr(wrapper, "_max_examples", 20), 25)
+                rng = np.random.default_rng(0xC0FFEE)
+                for _ in range(n):
+                    fn(*(s.sample(rng) for s in ss))
+            # keep the test's identity, but NOT __wrapped__ — pytest would
+            # follow it and mistake the property arguments for fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+        return deco
+
+strategies = st

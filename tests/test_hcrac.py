@@ -7,7 +7,7 @@ mechanism's safety property (a stale hit would under-time a leaky row).
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core import hcrac as H
 

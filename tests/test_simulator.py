@@ -3,7 +3,7 @@ multi-core dynamics — plus hypothesis properties on arbitrary traces."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core import (DDR3_1600, MechanismConfig, SimConfig, simulate,
                         weighted_speedup)

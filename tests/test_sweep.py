@@ -1,0 +1,148 @@
+"""Batched experiment engine: sweep() parity, padding, and compile-once.
+
+The sweep engine's contract (DESIGN.md §4): a vmapped grid run is
+*bitwise* identical to per-config ``simulate()`` calls — padding the
+HCRAC to the grid's max capacity, padding NUAT bins, and padding the
+scan length are all behaviour-neutral — and a whole grid costs exactly
+one XLA compilation of the scan body.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (HCRACConfig, MechanismConfig, SimConfig,
+                        lowered_for_duration, ms_to_cycles, simulate, sweep,
+                        sweep_traces, weighted_speedup)
+from repro.core import simulator as sim_mod
+from repro.core.traces import multicore_batch, single_core_batch
+
+N = 3000
+
+#: every exact-int stat the scan accumulates, plus the post-pass outputs
+BITWISE_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
+                "hcrac_lookups", "row_hits", "row_closed", "row_conflicts",
+                "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts",
+                "total_cycles", "rltl_total")
+
+
+def _cc_cfg(policy="open", n_entries=128, caching_ms=1.0, kind="chargecache"):
+    return SimConfig(
+        mech=MechanismConfig(
+            kind=kind,
+            hcrac=HCRACConfig(n_entries=n_entries,
+                              caching_cycles=ms_to_cycles(caching_ms)),
+            lowered=lowered_for_duration(caching_ms)),
+        policy=policy)
+
+
+def _assert_point_matches(ref: dict, got: dict):
+    for k in BITWISE_KEYS:
+        assert int(ref[k]) == int(got[k]), k
+    assert np.array_equal(ref["core_end"], got["core_end"])
+    assert np.array_equal(ref["rltl_hist"], got["rltl_hist"])
+
+
+def test_sweep_matches_simulate_all_mechanisms():
+    """All five mechanism kinds + capacity/duration variants in one grid
+    must reproduce per-config simulate() bitwise."""
+    batch = single_core_batch("milc_like", N, seed=5)
+    grid = [SimConfig(mech=MechanismConfig(kind=k))
+            for k in ("base", "chargecache", "nuat", "cc_nuat", "lldram")]
+    grid += [_cc_cfg(n_entries=32),
+             _cc_cfg(n_entries=1024, caching_ms=4.0),
+             _cc_cfg(kind="cc_nuat", n_entries=512, caching_ms=16.0)]
+    swept = sweep(batch, grid)
+    for cfg, got in zip(grid, swept):
+        _assert_point_matches(simulate(batch, cfg), got)
+
+
+def test_sweep_matches_simulate_multicore_closed():
+    batch = multicore_batch(["milc_like", "lbm_like", "gcc_like",
+                             "soplex_like"], 1200)
+    grid = [SimConfig(mech=MechanismConfig(kind=k), policy="closed")
+            for k in ("base", "chargecache", "lldram")]
+    swept = sweep(batch, grid)
+    for cfg, got in zip(grid, swept):
+        _assert_point_matches(simulate(batch, cfg), got)
+
+
+def test_pad_steps_is_a_noop():
+    """Padding the scan length to the trace capacity (compile-sharing
+    mode) must not change any statistic."""
+    batch = multicore_batch(["milc_like", "hmmer_like"], 1500)
+    # hmmer's tiny trace makes the padded step count >> the request count
+    assert int(batch.length.sum()) < batch.gap.shape[0] * batch.gap.shape[1]
+    grid = [SimConfig(mech=MechanismConfig(kind=k), policy="closed")
+            for k in ("base", "chargecache", "nuat", "cc_nuat", "lldram")]
+    exact = sweep(batch, grid, pad_steps=False)
+    padded = sweep(batch, grid, pad_steps=True)
+    for e, p in zip(exact, padded):
+        _assert_point_matches(e, p)
+
+
+def test_capacity_x_duration_grid_compiles_once():
+    """A >= 20-point capacity x duration grid runs through one sweep()
+    call with exactly one compilation of the batched scan."""
+    batch = single_core_batch("soplex_like", N, seed=7)
+    grid = [_cc_cfg(n_entries=cap, caching_ms=d)
+            for cap in (32, 64, 128, 512, 1024)
+            for d in (1.0, 2.0, 4.0, 16.0)]
+    assert len(grid) >= 20
+    before = sim_mod._run_batched._cache_size()
+    swept = sweep(batch, grid)
+    after = sim_mod._run_batched._cache_size()
+    assert after - before == 1, "grid sweep must compile exactly once"
+    # re-running the same-shaped sweep reuses the cached executable
+    sweep(batch, grid)
+    assert sim_mod._run_batched._cache_size() == after
+
+    # spot-check three corners of the grid against per-config simulate()
+    for idx in (0, 7, len(grid) - 1):
+        _assert_point_matches(simulate(batch, grid[idx]), swept[idx])
+
+    # hit rate grows with capacity, shrinks (weakly) with duration limits
+    hit = {(c.mech.hcrac.n_entries,
+            c.mech.hcrac.caching_cycles): s["hcrac_hit_rate"]
+           for c, s in zip(grid, swept)}
+    one_ms = ms_to_cycles(1.0)
+    assert hit[(1024, one_ms)] >= hit[(32, one_ms)]
+
+
+def test_sweep_traces_matches_simulate():
+    """The nested-vmap (trace x config) matrix must reproduce per-config
+    simulate() bitwise on every cell, with per-batch warm-up."""
+    batches = [single_core_batch(n, 1500, seed=5)
+               for n in ("milc_like", "lbm_like", "mcf_like")]
+    grid = [SimConfig(mech=MechanismConfig(kind=k))
+            for k in ("base", "chargecache", "nuat", "lldram")]
+    matrix = sweep_traces(batches, grid)
+    for b, batch in enumerate(batches):
+        for g, cfg in enumerate(grid):
+            ref = simulate(batch, cfg)
+            got = matrix[b][g]
+            for k in BITWISE_KEYS:
+                if k == "rltl_total":
+                    continue  # events not collected by default
+                assert int(ref[k]) == int(got[k]), (b, g, k)
+            assert np.array_equal(ref["core_end"], got["core_end"])
+            assert got["rltl_hist"] is None
+
+
+def test_sweep_speedup_usable_for_weighted_speedup():
+    """The grid results compose with the thesis metrics exactly like
+    per-config runs do (base at grid[0], mechanisms after)."""
+    batch = multicore_batch(["milc_like", "mcf_like"], 1500)
+    grid = [SimConfig(mech=MechanismConfig(kind=k), policy="closed")
+            for k in ("base", "chargecache", "lldram")]
+    base, cc, ll = sweep(batch, grid)
+    ws_cc = weighted_speedup(base["core_end"], cc["core_end"])
+    ws_ll = weighted_speedup(base["core_end"], ll["core_end"])
+    assert ws_ll >= ws_cc >= 0.99
+
+
+def test_sweep_grid_shape_mismatch_rejected():
+    batch = single_core_batch("milc_like", 500, seed=1)
+    good = SimConfig(mech=MechanismConfig(kind="base"))
+    bad = SimConfig(mech=MechanismConfig(kind="base"), mshr=16)
+    with pytest.raises(AssertionError):
+        sweep(batch, [good, bad])
