@@ -29,9 +29,11 @@ if "jax" not in sys.modules:
 import numpy as np
 
 from repro.core import (HCRACConfig, MechanismConfig, SimConfig, simulate,
-                        sweep, sweep_traces, weighted_speedup)
+                        weighted_speedup)
 from repro.core.traces import (WORKLOADS, multicore_batch, random_mixes,
                                single_core_batch)
+from repro.experiment import Experiment
+from repro.experiment.results import Results
 
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
 
@@ -85,54 +87,24 @@ def sim_mix(names: list[str], kind: str, seed: int = 3, **mech_kw) -> dict:
     return simulate(batch, sim_cfg(kind, len(names), **mech_kw))
 
 
-def sweep_single(name: str, grid: list[SimConfig], seed: int = 3) -> list[dict]:
-    """Evaluate a whole config grid on one single-core workload in one
-    vmapped call (pad_steps so all workloads share one compilation)."""
-    batch = _single_batch(name, N_REQ_1C, seed)
-    return sweep(batch, grid, pad_steps=True, rltl=False)
+def experiment_singles(names: list[str], axes: dict, seed: int = 3,
+                       **kw) -> Results:
+    """The whole (workload × axes) evaluation matrix through the
+    Experiment API: one nested-vmap compile per trace shape and chunk,
+    labeled Results with a leading ``workload`` dim."""
+    traces = {n: _single_batch(n, N_REQ_1C, seed) for n in names}
+    return Experiment(traces=traces, axes=axes, base=sim_cfg("base", 1),
+                      trace_dim="workload", **kw).run()
 
 
-def sweep_mix(names: list[str], grid: list[SimConfig],
-              seed: int = 3) -> list[dict]:
-    """Evaluate a whole config grid on one 8-core mix in one vmapped call
-    (pad_steps so all mixes share one compilation)."""
-    batch = _mix_batch(tuple(names), N_REQ_8C, seed)
-    return sweep(batch, grid, pad_steps=True, rltl=False)
-
-
-def _grouped_sweep(batches: list, grid: list[SimConfig]) -> list[list[dict]]:
-    """sweep_traces over batches grouped by core count; within a group,
-    short batches (low-traffic workloads) are zero-padded to the longest
-    trace so the whole group shares one compilation.  Input order is
-    preserved."""
-    from repro.core.traces import pad_batch_to
-    by_cores: dict = {}
-    for i, b in enumerate(batches):
-        by_cores.setdefault(b.gap.shape[0], []).append(i)
-    out: list = [None] * len(batches)
-    for idxs in by_cores.values():
-        max_len = max(batches[i].gap.shape[1] for i in idxs)
-        res = sweep_traces([pad_batch_to(batches[i], max_len) for i in idxs],
-                           grid)
-        for i, row in zip(idxs, res):
-            out[i] = row
-    return out
-
-
-def sweep_singles(names: list[str], grid: list[SimConfig],
-                  seed: int = 3) -> dict[str, list[dict]]:
-    """The whole (workload x config) evaluation matrix in one nested-vmap
-    call per trace shape: returns name -> [stats per grid point]."""
-    batches = [_single_batch(n, N_REQ_1C, seed) for n in names]
-    return dict(zip(names, _grouped_sweep(batches, grid)))
-
-
-def sweep_mixes(mixes: list[list[str]], grid: list[SimConfig],
-                seed: int = 3) -> list[list[dict]]:
-    """The whole (mix x config) evaluation matrix in one nested-vmap call
-    per trace shape: returns [mix index][grid point] stats."""
-    batches = [_mix_batch(tuple(m), N_REQ_8C, seed) for m in mixes]
-    return _grouped_sweep(batches, grid)
+def experiment_mixes(mixes: list[list[str]], axes: dict, seed: int = 3,
+                     **kw) -> Results:
+    """The whole (8-core mix × axes) evaluation matrix through the
+    Experiment API; Results carry a leading ``mix`` dim (mix00, ...)."""
+    traces = {f"mix{i:02d}": _mix_batch(tuple(m), N_REQ_8C, seed)
+              for i, m in enumerate(mixes)}
+    return Experiment(traces=traces, axes=axes, base=sim_cfg("base", 8),
+                      trace_dim="mix", **kw).run()
 
 
 def timed(fn, *args, **kw):

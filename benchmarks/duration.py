@@ -3,14 +3,13 @@
 Paper claim: 1 ms is the best duration — longer durations gain little hit
 rate but lose timing reduction (Table 6.1's tRCD/tRAS grow with duration).
 
-Batched engine: base + all durations evaluate per mix through one
-``sweep()`` call (caching duration is traced data, so the duration axis
-adds no compilations).
+Experiment API: ``duration_ms`` is a named axis (it sets both the HCRAC
+expiry and the Table 6.1 lowered timings); the baseline dedups across
+the duration axis and the labeled ``Results`` select per-duration slices
+directly (DESIGN.md §7).
 """
 
 from __future__ import annotations
-
-import time
 
 import numpy as np
 
@@ -22,19 +21,23 @@ DURATIONS_MS = (1.0, 4.0, 16.0)
 
 def run() -> list[str]:
     mixes = C.eight_core_mixes()[:5 if not C.QUICK else 1]
-    grid = [C.sim_cfg("base", 8)] + [
-        C.sim_cfg("chargecache", 8, caching_ms=d) for d in DURATIONS_MS]
-    out = {d: ([], []) for d in DURATIONS_MS}
-    t0 = time.time()
-    for res in C.sweep_mixes(mixes, grid):
-        base = res[0]
-        for d, s in zip(DURATIONS_MS, res[1:]):
-            out[d][0].append(weighted_speedup(base["core_end"],
-                                              s["core_end"]))
-            out[d][1].append(s["hcrac_hit_rate"])
-    us = (time.time() - t0) * 1e6
-    avg = {d: (float(np.mean(sp)), float(np.mean(h)))
-           for d, (sp, h) in out.items()}
+
+    def work():
+        res = C.experiment_mixes(
+            mixes, axes={"mechanism": ["base", "chargecache"],
+                         "duration_ms": DURATIONS_MS})
+        ws = lambda b, s: weighted_speedup(b["core_end"], s["core_end"])
+        out = {}
+        for d in DURATIONS_MS:
+            at_d = res.sel(duration_ms=d)
+            out[d] = (
+                float(at_d.pairwise("mechanism", "base", ws)
+                      ["chargecache"].mean()),
+                float(at_d.sel(mechanism="chargecache")
+                      .metric("hcrac_hit_rate").mean()))
+        return out
+
+    avg, us = C.timed(work)
     best = max(avg, key=lambda d: avg[d][0])
     return [C.csv_row(
         "duration_fig6.5", us,

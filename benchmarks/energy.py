@@ -3,8 +3,9 @@
 Paper claims: -1.8% avg / -6.9% max (single-core); -7.9% avg / -14.1% max
 (eight-core).
 
-Batched engine: base + ChargeCache evaluate per workload/mix in one
-``sweep()`` call.
+Experiment API: base + ChargeCache per workload/mix as a two-label
+mechanism axis; the reduction is a ``Results.pairwise`` against the base
+label (DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -23,11 +24,11 @@ def reduction(base: dict, mech: dict) -> float:
 
 def run() -> list[str]:
     rows = []
+    axes = {"mechanism": ["base", "chargecache"]}
 
     def single():
-        grid = [C.sim_cfg("base", 1), C.sim_cfg("chargecache", 1)]
-        return [reduction(*row)
-                for row in C.sweep_singles(C.SINGLE_NAMES, grid).values()]
+        res = C.experiment_singles(C.SINGLE_NAMES, axes)
+        return res.pairwise("mechanism", "base", reduction)["chargecache"]
 
     red1, us1 = C.timed(single)
     rows.append(C.csv_row(
@@ -35,9 +36,8 @@ def run() -> list[str]:
         f"avg={np.mean(red1):.4f};max={np.max(red1):.4f}"))
 
     def eight():
-        grid = [C.sim_cfg("base", 8), C.sim_cfg("chargecache", 8)]
-        return [reduction(*res)
-                for res in C.sweep_mixes(C.eight_core_mixes(), grid)]
+        res = C.experiment_mixes(C.eight_core_mixes(), axes)
+        return res.pairwise("mechanism", "base", reduction)["chargecache"]
 
     red8, us8 = C.timed(eight)
     rows.append(C.csv_row(

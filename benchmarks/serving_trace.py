@@ -1,52 +1,42 @@
 """Closed loop (DESIGN.md §2.2): the serving scheduler's page-access trace
 is fed to the faithful DRAM simulator with and without ChargeCache, with
 charge-aware admission on and off — quantifying the TPU-serving analogue
-of the thesis mechanism end to end."""
+of the thesis mechanism end to end.
+
+Experiment API: the whole (scheduler policy × mechanism) grid is
+``repro.serving.study.policy_experiment()`` — one ``sweep_traces``
+compile per chunk instead of four per-config ``simulate()`` calls, with
+the scheduler's hot-page hit rate surfaced as a per-grid-point metric.
+"""
 
 from __future__ import annotations
 
-import numpy as np
-
 from benchmarks import common as C
-from repro.core import MechanismConfig, SimConfig, simulate
-from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
-
-
-def build_trace(charge_aware: bool, n_reqs: int = 48, steps: int = 120):
-    cfg = SchedulerConfig(max_batch=16, charge_aware=charge_aware)
-    sched = Scheduler(cfg)
-    rng = np.random.default_rng(11)
-    for rid in range(n_reqs):
-        sched.submit(Request(rid=rid,
-                             prompt_len=int(rng.integers(2048, 16384)),
-                             max_new=int(rng.integers(16, 64))))
-    sched.run(steps)
-    return sched
+from repro.serving.study import policy_experiment
 
 
 def run() -> list[str]:
     def work():
+        res = policy_experiment().run()
         out = {}
-        for aware in (False, True):
-            sched = build_trace(aware)
-            batch = sched.emit_trace()
-            base = simulate(batch, SimConfig(mech=C.mech_config("base")))
-            cc = simulate(batch, SimConfig(
-                mech=C.mech_config("chargecache", n_entries=1024)))
-            out[aware] = {
-                "hot_frac": (sched.stats["hot_hits"]
-                             / max(sched.stats["probes"], 1)),
+        for policy in res.coords["policy"]:
+            base = res.point(policy=policy, mechanism="base")
+            cc = res.point(policy=policy, mechanism="chargecache")
+            out[policy] = {
+                "hot_frac": cc["hot_frac"],
                 "cc_hit": cc["hcrac_hit_rate"],
                 "speedup": base["total_cycles"] / max(cc["total_cycles"], 1),
             }
         return out
 
     out, us = C.timed(work)
+    f, a = out["fifo"], out["charge_aware"]
     return [C.csv_row(
         "serving_closed_loop", us,
-        f"fifo:hit={out[False]['cc_hit']:.3f}/sp={out[False]['speedup']:.4f}"
-        f";charge_aware:hit={out[True]['cc_hit']:.3f}"
-        f"/sp={out[True]['speedup']:.4f}")]
+        f"fifo:hit={f['cc_hit']:.3f}/sp={f['speedup']:.4f}"
+        f"/hot={f['hot_frac']:.3f}"
+        f";charge_aware:hit={a['cc_hit']:.3f}/sp={a['speedup']:.4f}"
+        f"/hot={a['hot_frac']:.3f}")]
 
 
 if __name__ == "__main__":

@@ -4,9 +4,10 @@ Paper claims: single-core avg +2.1% (up to 9.3%); eight-core avg +8.6%
 (CC), +2.5% (NUAT), +9.6% (CC+NUAT), LL-DRAM ~+13%; and ~67% of
 activations served with lowered timings on eight-core.
 
-Batched engine: base + all four mechanisms evaluate per workload/mix in
-one vmapped ``sweep()`` call — mechanism selection is traced data, so
-the five kinds share one compiled scan (DESIGN.md §4).
+Experiment API: the mechanism axis enumerates registry entries; every
+(workload × mechanism) pair evaluates in one compile per trace shape and
+the speedups come out of ``Results.pairwise`` against the base label
+(DESIGN.md §7).
 """
 
 from __future__ import annotations
@@ -20,37 +21,31 @@ MECHS = ("chargecache", "nuat", "cc_nuat", "lldram")
 
 
 def single_core() -> dict:
-    grid = [C.sim_cfg("base", 1)] + [C.sim_cfg(m, 1) for m in MECHS]
-    out = {m: {} for m in MECHS}
-    lowered_frac = {}
-    matrix = C.sweep_singles(C.SINGLE_NAMES, grid)
-    for name in C.SINGLE_NAMES:
-        res = matrix[name]
-        base = res[0]
-        for m, s in zip(MECHS, res[1:]):
-            out[m][name] = base["total_cycles"] / max(s["total_cycles"], 1)
-            if m == "chargecache":
-                lowered_frac[name] = s["acts_lowered_frac"]
-    avg = {m: float(np.mean(list(v.values()))) for m, v in out.items()}
-    mx = {m: float(np.max(list(v.values()))) for m, v in out.items()}
+    res = C.experiment_singles(
+        C.SINGLE_NAMES, axes={"mechanism": ("base",) + MECHS})
+    sp = res.pairwise(
+        "mechanism", "base",
+        lambda b, s: b["total_cycles"] / max(s["total_cycles"], 1))
+    out = {m: dict(zip(C.SINGLE_NAMES, sp[m])) for m in MECHS}
+    lowered = res.sel(mechanism="chargecache").metric("acts_lowered_frac")
+    avg = {m: float(np.mean(sp[m])) for m in MECHS}
+    mx = {m: float(np.max(sp[m])) for m in MECHS}
     return {"per_workload": out, "avg": avg, "max": mx,
-            "lowered_frac": float(np.mean(list(lowered_frac.values())))}
+            "lowered_frac": float(lowered.mean())}
 
 
 def eight_core() -> dict:
-    grid = [C.sim_cfg("base", 8)] + [C.sim_cfg(m, 8) for m in MECHS]
-    out = {m: [] for m in MECHS}
-    lowered = []
-    for res in C.sweep_mixes(C.eight_core_mixes(), grid):
-        base = res[0]
-        for m, s in zip(MECHS, res[1:]):
-            out[m].append(weighted_speedup(base["core_end"], s["core_end"]))
-            if m == "chargecache":
-                lowered.append(s["acts_lowered_frac"])
-    avg = {m: float(np.mean(v)) for m, v in out.items()}
-    mx = {m: float(np.max(v)) for m, v in out.items()}
-    return {"per_mix": out, "avg": avg, "max": mx,
-            "lowered_frac": float(np.mean(lowered))}
+    res = C.experiment_mixes(
+        C.eight_core_mixes(), axes={"mechanism": ("base",) + MECHS})
+    sp = res.pairwise(
+        "mechanism", "base",
+        lambda b, s: weighted_speedup(b["core_end"], s["core_end"]))
+    lowered = res.sel(mechanism="chargecache").metric("acts_lowered_frac")
+    avg = {m: float(np.mean(sp[m])) for m in MECHS}
+    mx = {m: float(np.max(sp[m])) for m in MECHS}
+    return {"per_mix": {m: sp[m].tolist() for m in MECHS},
+            "avg": avg, "max": mx,
+            "lowered_frac": float(lowered.mean())}
 
 
 def run() -> list[str]:

@@ -4,22 +4,22 @@ Run:  PYTHONPATH=src python examples/chargecache_sim.py [--workload mcf_like]
       PYTHONPATH=src python examples/chargecache_sim.py --eight-core
       PYTHONPATH=src python examples/chargecache_sim.py --heat-grid
 
-``--heat-grid`` demonstrates the batched experiment engine: a full HCRAC
-capacity x caching-duration grid (plus all five mechanism kinds) is
-evaluated through single ``sweep()`` calls — one XLA compilation for the
-whole grid instead of one per point.
+Everything goes through the declarative Experiment API (DESIGN.md §7):
+the mechanism table is a one-axis spec, and ``--heat-grid`` is a
+mechanism × capacity × duration grid — the runner dedups the shared
+baseline, evaluates the rest through single compiled ``sweep()``
+launches, and the labeled ``Results`` replace all grid-index loops.
 """
 
 import argparse
 import time
 
-from repro.core import (HCRACConfig, MechanismConfig, SimConfig,
-                        lowered_for_duration, ms_to_cycles, simulate, sweep,
-                        weighted_speedup)
+from repro.core import SimConfig, weighted_speedup
 from repro.core.energy import energy_nj
 from repro.core.rltl import rltl_fractions
 from repro.core.traces import (WORKLOADS, multicore_batch, random_mixes,
                                single_core_batch)
+from repro.experiment import Experiment
 
 MECHS = ("base", "chargecache", "nuat", "cc_nuat", "lldram")
 
@@ -28,42 +28,41 @@ HEAT_DURATIONS_MS = (0.5, 1.0, 2.0, 4.0, 16.0)
 
 
 def heat_grid(batch, policy: str) -> None:
-    """capacity x duration hit-rate/speedup heat table, one sweep() call."""
-    grid = [SimConfig(mech=MechanismConfig(kind="base"), policy=policy)]
-    for cap in HEAT_CAPS:
-        for d in HEAT_DURATIONS_MS:
-            grid.append(SimConfig(
-                mech=MechanismConfig(
-                    kind="chargecache",
-                    hcrac=HCRACConfig(n_entries=cap,
-                                      caching_cycles=ms_to_cycles(d)),
-                    lowered=lowered_for_duration(d)),
-                policy=policy))
+    """capacity x duration hit-rate/speedup heat table, one Experiment."""
+    exp = Experiment(
+        traces=batch,
+        axes={"mechanism": ["base", "chargecache"],
+              "capacity": HEAT_CAPS,
+              "duration_ms": HEAT_DURATIONS_MS},
+        base=SimConfig(policy=policy))
     t0 = time.time()
-    res = sweep(batch, grid, rltl=False)
+    res = exp.run()
     dt = time.time() - t0
-    base, points = res[0], res[1:]
-    print(f"\n{len(grid)}-point capacity x duration grid in one sweep() "
-          f"call: {dt:.1f}s ({1e3 * dt / len(grid):.0f} ms/point)")
+    m = res.meta
+    print(f"\n{m['n_points']}-point mechanism x capacity x duration grid "
+          f"({m['n_unique']} unique runs after baseline dedup) in "
+          f"{m['n_chunks']} chunk(s): {dt:.1f}s "
+          f"({1e3 * dt / m['n_unique']:.0f} ms/run)")
 
-    print(f"\nHCRAC hit rate (rows: entries; cols: caching duration)")
     hdr = "entries".rjust(8) + "".join(f"{d:g}ms".rjust(9)
                                        for d in HEAT_DURATIONS_MS)
+    print(f"\nHCRAC hit rate (rows: entries; cols: caching duration)")
     print(hdr)
-    it = iter(points)
-    rows = {cap: [next(it) for _ in HEAT_DURATIONS_MS] for cap in HEAT_CAPS}
+    cc = res.sel(mechanism="chargecache")
     for cap in HEAT_CAPS:
         print(f"{cap:8d}" + "".join(
-            f"{s['hcrac_hit_rate']:9.2%}" for s in rows[cap]))
+            f"{cc.point(capacity=cap, duration_ms=d)['hcrac_hit_rate']:9.2%}"
+            for d in HEAT_DURATIONS_MS))
 
     print(f"\nspeedup over baseline")
     print(hdr)
-    for cap in HEAT_CAPS:
-        cells = []
-        for s in rows[cap]:
-            sp = weighted_speedup(base["core_end"], s["core_end"])
-            cells.append(f"{sp:9.4f}")
-        print(f"{cap:8d}" + "".join(cells))
+    sp = res.pairwise(
+        "mechanism", "base",
+        lambda b, s: weighted_speedup(b["core_end"], s["core_end"]))
+    for i, cap in enumerate(HEAT_CAPS):
+        print(f"{cap:8d}" + "".join(
+            f"{sp['chargecache'][i, j]:9.4f}"
+            for j in range(len(HEAT_DURATIONS_MS))))
 
 
 def main():
@@ -91,11 +90,10 @@ def main():
         return
 
     # all five mechanisms in one vmapped sweep (single compile)
-    grid = [SimConfig(mech=MechanismConfig(kind=kind), policy=policy)
-            for kind in MECHS]
-    results = dict(zip(MECHS, sweep(batch, grid)))
+    res = Experiment(traces=batch, axes={"mechanism": list(MECHS)},
+                     base=SimConfig(policy=policy), rltl=True).run()
 
-    base = results["base"]
+    base = res.point(mechanism="base")
     f = rltl_fractions(base)
     print(f"\nRLTL: 0.125ms={f['rltl_0.125ms']:.2f}  8ms={f['rltl_8.0ms']:.2f}"
           f"  refresh-8ms={f['refresh_8ms_frac']:.2f}")
@@ -103,7 +101,7 @@ def main():
           f"{'lowered':>8s} {'energy':>8s}")
     e_base = energy_nj(base)["total"]
     for kind in MECHS:
-        r = results[kind]
+        r = res.point(mechanism=kind)
         if args.eight_core:
             sp = weighted_speedup(base["core_end"], r["core_end"])
         else:

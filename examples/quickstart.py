@@ -9,15 +9,17 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import jax
 import jax.numpy as jnp
 
-from repro.core import MechanismConfig, SimConfig, simulate
 from repro.core.traces import single_core_batch
+from repro.experiment import Experiment
 
 
 def chargecache_demo():
     print("== ChargeCache on a synthetic mcf-like workload ==")
     batch = single_core_batch("soplex_like", 40_000, seed=1)
-    base = simulate(batch, SimConfig(mech=MechanismConfig(kind="base")))
-    cc = simulate(batch, SimConfig(mech=MechanismConfig(kind="chargecache")))
+    res = Experiment(traces=batch,
+                     axes={"mechanism": ["base", "chargecache"]}).run()
+    base = res.point(mechanism="base")
+    cc = res.point(mechanism="chargecache")
     print(f"  baseline cycles : {base['total_cycles']:,}")
     print(f"  chargecache     : {cc['total_cycles']:,}"
           f"  (speedup {base['total_cycles'] / cc['total_cycles']:.3f}x)")

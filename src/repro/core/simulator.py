@@ -23,12 +23,14 @@ counters) accumulate in-scan with warm-up masking.
 **Batched experiment engine** (DESIGN.md §4): a configuration is split
 into a static *shape* (``SimShape`` — array sizes, HCRAC geometry, MSHR
 depth) and a traced *params* pytree (``MechParams`` — every timing value,
-the mechanism enable flags, HCRAC capacity/duration, NUAT bins).  The
-scan body takes params as data, so mechanism selection is a ``where`` on
-enable flags rather than Python branching, one compiled program serves
-all five mechanism kinds, and ``sweep()`` evaluates a whole evaluation
-grid by ``vmap``-ing over stacked params — one XLA compilation for the
-entire grid, sharded across devices when more than one is available.
+HCRAC capacity/duration, one gated param block per registered mechanism
+policy).  The scan body takes params as data and delegates timing
+selection to the mechanism registry (``repro.experiment.registry``), so
+mechanism choice is a fold of data-driven policies rather than Python
+branching, one compiled program serves every registered mechanism kind,
+and ``sweep()`` evaluates a whole evaluation grid by ``vmap``-ing over
+stacked params — one XLA compilation for the entire grid, sharded across
+devices when more than one is available.
 
 Approximations vs. Ramulator (documented in DESIGN.md): FR-FCFS is
 approximated by per-bank in-order service with dynamic multi-core
@@ -52,8 +54,9 @@ from repro.core.dram import (DRAMConfig, DDR3_SYSTEM, NO_ROW, refresh_adjust,
 from repro.core import timing as timing_lib
 from repro.core.timing import (TimingParams, TimingVec, DDR3_1600,
                                ms_to_cycles)
-from repro.core import charge_model
 from repro.core.traces import TraceBatch
+from repro.core import mechanisms as registry
+from repro.core.mechanisms import default_nuat_bins  # noqa: F401 (re-export)
 
 INF = jnp.int32(2**30)
 
@@ -62,43 +65,22 @@ INF = jnp.int32(2**30)
 RLTL_EDGES_MS = (0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
 
 
-def default_nuat_bins(timing: TimingParams = DDR3_1600):
-    """NUAT 5PB bins: (upper-edge cycles, tRCD, tRAS), last bin = baseline.
-
-    Bin timings come from the charge model evaluated at each bin's upper
-    edge (worst case within the bin), as NUAT's SPICE methodology does.
-    """
-    edges_ms = (8.0, 16.0, 32.0, 48.0, 64.0)
-    bins = []
-    for e in edges_ms:
-        d = charge_model.derive_timings(e)
-        bins.append((ms_to_cycles(e),
-                     min(d.tRCD_cycles, timing.tRCD),
-                     min(d.tRAS_cycles, timing.tRAS)))
-    return tuple(bins)
-
-
 @dataclasses.dataclass(frozen=True)
 class MechanismConfig:
-    kind: str = "chargecache"  # base|chargecache|nuat|cc_nuat|lldram
+    #: any kind registered in ``repro.experiment.registry`` (builtins:
+    #: base | chargecache | nuat | cc_nuat | lldram)
+    kind: str = "chargecache"
     hcrac: hcrac_lib.HCRACConfig = hcrac_lib.HCRACConfig()
     lowered: TimingParams = dataclasses.field(
         default_factory=lambda: DDR3_1600.with_reduction(4, 8))
     nuat_bins: tuple = ()
 
     def __post_init__(self):
-        assert self.kind in ("base", "chargecache", "nuat", "cc_nuat",
-                             "lldram"), self.kind
-        if self.kind in ("nuat", "cc_nuat") and not self.nuat_bins:
+        assert self.kind in registry.names(), (
+            f"unregistered mechanism kind {self.kind!r}; "
+            f"known: {registry.names()}")
+        if "nuat" in registry.components(self.kind) and not self.nuat_bins:
             object.__setattr__(self, "nuat_bins", default_nuat_bins())
-
-    @property
-    def uses_cc(self) -> bool:
-        return self.kind in ("chargecache", "cc_nuat")
-
-    @property
-    def uses_nuat(self) -> bool:
-        return self.kind in ("nuat", "cc_nuat")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -127,67 +109,44 @@ class SimShape:
     dram: DRAMConfig
     hcrac: hcrac_lib.HCRACConfig  # shape carrier: max sets / ways / expiry
     mshr: int
-    n_nuat_bins: int
 
 
 class MechParams(NamedTuple):
-    """The traced half: one pytree of int32/bool scalars (plus the padded
-    NUAT bin arrays).  ``sweep()`` stacks these along a leading grid axis
-    and ``vmap``s the simulator over it."""
+    """The traced half: one pytree of int32/bool scalars plus one params
+    block per registered mechanism policy (``mech[name]`` — every block
+    present at every grid point, gated by its traced ``enable`` leaf).
+    ``sweep()`` stacks these along a leading grid axis and ``vmap``s the
+    simulator over it."""
     timing: TimingVec            # full DDR3 timing set, traced
-    low_tRCD: jnp.ndarray        # lowered timings (ChargeCache hit / LL-DRAM)
-    low_tRAS: jnp.ndarray
-    cc_enable: jnp.ndarray       # bool: HCRAC insert/lookup path active
-    nuat_enable: jnp.ndarray     # bool: NUAT bin timings active
-    ll_enable: jnp.ndarray       # bool: always-lowered (LL-DRAM)
     closed_policy: jnp.ndarray   # bool: closed-row policy (auto-precharge)
     hcrac: hcrac_lib.HCRACParams
-    nuat_edge: jnp.ndarray       # [n_nuat_bins] upper edges (0 = inert pad)
-    nuat_rcd: jnp.ndarray        # [n_nuat_bins]
-    nuat_ras: jnp.ndarray        # [n_nuat_bins]
+    mech: dict                   # registry blocks: {policy: {leaf: array}}
 
 
-def sim_shape(cfg: SimConfig, n_sets_max: int | None = None,
-              n_nuat_bins: int | None = None) -> SimShape:
-    """The static shape of ``cfg``; ``n_sets_max``/``n_nuat_bins`` pad the
-    HCRAC / NUAT arrays so a whole grid shares one shape."""
+def sim_shape(cfg: SimConfig, n_sets_max: int | None = None) -> SimShape:
+    """The static shape of ``cfg``; ``n_sets_max`` pads the HCRAC arrays
+    so a whole grid shares one shape."""
     h = cfg.mech.hcrac
     return SimShape(
         dram=cfg.dram,
         hcrac=hcrac_lib.padded_shape(h, n_sets_max or h.n_sets),
         mshr=cfg.mshr,
-        n_nuat_bins=(len(cfg.mech.nuat_bins) if n_nuat_bins is None
-                     else n_nuat_bins),
     )
 
 
-def mech_params(cfg: SimConfig, n_nuat_bins: int | None = None) -> MechParams:
+def mech_params(cfg: SimConfig, hints: dict | None = None) -> MechParams:
     """Flatten ``cfg``'s numeric content into the traced params pytree.
 
-    NUAT bins are padded to ``n_nuat_bins`` with zero edges; since
-    time-since-refresh is always >= 0, a zero-edge bin never matches, so
-    padding is behaviour-neutral (bitwise).
+    Each registered mechanism policy contributes its own block (see
+    ``repro.experiment.registry``); ``hints`` carries grid-wide padding
+    facts (e.g. the max NUAT bin count) so every point of a sweep shares
+    one block structure.  All padding is behaviour-neutral (bitwise).
     """
-    mech = cfg.mech
-    bins = list(mech.nuat_bins)
-    nb = len(bins) if n_nuat_bins is None else n_nuat_bins
-    assert nb >= len(bins), (nb, len(bins))
-    pad = nb - len(bins)
-    edges = [e for e, _, _ in bins] + [0] * pad
-    rcds = [r for _, r, _ in bins] + [cfg.timing.tRCD] * pad
-    rass = [s for _, _, s in bins] + [cfg.timing.tRAS] * pad
     return MechParams(
         timing=timing_lib.traced(cfg.timing),
-        low_tRCD=jnp.int32(mech.lowered.tRCD),
-        low_tRAS=jnp.int32(mech.lowered.tRAS),
-        cc_enable=jnp.bool_(mech.uses_cc),
-        nuat_enable=jnp.bool_(mech.uses_nuat),
-        ll_enable=jnp.bool_(mech.kind == "lldram"),
         closed_policy=jnp.bool_(cfg.policy == "closed"),
-        hcrac=hcrac_lib.params_of(mech.hcrac),
-        nuat_edge=jnp.asarray(edges, jnp.int32),
-        nuat_rcd=jnp.asarray(rcds, jnp.int32),
-        nuat_ras=jnp.asarray(rass, jnp.int32),
+        hcrac=hcrac_lib.params_of(cfg.mech.hcrac),
+        mech=registry.build_blocks(cfg.mech, cfg.timing, hints),
     )
 
 
@@ -278,11 +237,15 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
     is_closed = openr == NO_ROW
     is_conflict = ~is_hit & ~is_closed
 
+    # HCRAC substrate gate: any registered policy that declared
+    # ``uses_hcrac`` and is enabled at this grid point (traced data).
+    hc_gate = registry.hcrac_gate(p.mech)
+
     # --- conflict path: PRE the open row (insert it into the HCRAC) ------
     t_pre = refresh_adjust(T, jnp.maximum(t0, st.ready_pre[bank]))
     gid_old = dram.global_row_id(bank, jnp.where(is_conflict, openr, 0))
     hc = hcrac_lib.insert(hshape, st.hcrac, gid_old, t_pre,
-                          enable=is_conflict & p.cc_enable & enable,
+                          enable=is_conflict & hc_gate & enable,
                           params=p.hcrac)
 
     # --- ACT ---------------------------------------------------------------
@@ -295,24 +258,17 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
     gid = dram.global_row_id(bank, row)
     cc_hit, hc = hcrac_lib.lookup(hshape, hc, gid, t_act, enable=enable,
                                   params=p.hcrac)
-    cc_hit = cc_hit & needs_act & p.cc_enable
+    cc_hit = cc_hit & needs_act & hc_gate
 
-    # mechanism timing selection, all data-driven (same ordering as the
-    # original Python branches: LL-DRAM base, then ChargeCache hit
-    # override, then NUAT minimum):
-    rcd = jnp.where(p.ll_enable, p.low_tRCD, T.tRCD)
-    ras = jnp.where(p.ll_enable, p.low_tRAS, T.tRAS)
-    rcd = jnp.where(cc_hit, p.low_tRCD, rcd)
-    ras = jnp.where(cc_hit, p.low_tRAS, ras)
+    # mechanism timing selection: fold the registered policies over the
+    # baseline timings, in registration order (LL-DRAM base, then
+    # ChargeCache hit override, then NUAT minimum — DESIGN.md §7.2).
+    # Selection stays data-driven: each policy gates on its own traced
+    # ``enable`` leaf, so one compiled body serves every registered kind.
     tsr = time_since_refresh(dram, T, row, t_act)
-    n_rcd = T.tRCD
-    n_ras = T.tRAS
-    for i in range(shape.n_nuat_bins - 1, -1, -1):
-        inbin = tsr < p.nuat_edge[i]
-        n_rcd = jnp.where(inbin, p.nuat_rcd[i], n_rcd)
-        n_ras = jnp.where(inbin, p.nuat_ras[i], n_ras)
-    rcd = jnp.where(p.nuat_enable, jnp.minimum(rcd, n_rcd), rcd)
-    ras = jnp.where(p.nuat_enable, jnp.minimum(ras, n_ras), ras)
+    ctx = registry.SelectCtx(timing=T, hcrac_hit=cc_hit, tsr=tsr,
+                             needs_act=needs_act)
+    rcd, ras = registry.select_timings(p.mech, ctx)
     lowered_used = needs_act & ((rcd < T.tRCD) | (ras < T.tRAS))
 
     # --- READ / WRITE -------------------------------------------------------
@@ -335,7 +291,7 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
     auto_pre = p.closed_policy & ~next_same
     t_autopre = new_ready_pre
     hc = hcrac_lib.insert(hshape, hc, gid, t_autopre,
-                          enable=auto_pre & p.cc_enable & enable,
+                          enable=auto_pre & hc_gate & enable,
                           params=p.hcrac)
     new_open = jnp.where(auto_pre, NO_ROW, row)
     new_ready_act = jnp.where(
@@ -353,7 +309,7 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
     _acc(stats, "lat_sum", m * (done - t_arr))
     _acc(stats, "acts", m * needs_act)
     _acc(stats, "acts_lowered", m * lowered_used)
-    _acc(stats, "hcrac_lookups", m * (needs_act & p.cc_enable))
+    _acc(stats, "hcrac_lookups", m * (needs_act & hc_gate))
     _acc(stats, "hcrac_hits", m * cc_hit)
     _acc(stats, "row_hits", m * is_hit)
     _acc(stats, "row_closed", m * is_closed)
@@ -625,27 +581,39 @@ def _shard_grid(stacked: MechParams, n_grid: int):
     return stacked, n_grid + pad
 
 
-def _grid_shape_and_params(grid: Sequence[SimConfig]):
+def _grid_shape_and_params(grid: Sequence[SimConfig],
+                           shape_grid: Sequence[SimConfig] | None = None):
     """Validate grid shape compatibility; return the unified static shape
-    and the stacked traced params."""
+    and the stacked traced params.
+
+    ``shape_grid`` (a superset of ``grid``, defaulting to ``grid``) is
+    what determines the padded HCRAC capacity and the registry pad hints:
+    the experiment runner passes the *full* grid here while launching a
+    chunk, so every chunk shares one ``SimShape`` — and therefore one
+    compilation.  Extra padding is behaviour-neutral (DESIGN.md §4).
+    """
+    shape_grid = list(shape_grid) if shape_grid is not None else list(grid)
     c0 = grid[0]
-    for cfg in grid:
+    for cfg in list(grid) + shape_grid:
         assert cfg.dram == c0.dram, "sweep grid must share DRAM geometry"
         assert cfg.mshr == c0.mshr, "sweep grid must share MSHR depth"
         assert cfg.warmup_frac == c0.warmup_frac
         assert cfg.mech.hcrac.n_ways == c0.mech.hcrac.n_ways
         assert cfg.mech.hcrac.exact_expiry == c0.mech.hcrac.exact_expiry
-    n_sets_max = max(cfg.mech.hcrac.n_sets for cfg in grid)
-    n_bins = max(len(cfg.mech.nuat_bins) for cfg in grid)
-    shape = sim_shape(c0, n_sets_max=n_sets_max, n_nuat_bins=n_bins)
+    n_sets_max = max(cfg.mech.hcrac.n_sets for cfg in shape_grid)
+    assert n_sets_max >= max(cfg.mech.hcrac.n_sets for cfg in grid), \
+        "shape_grid must cover every launched config's HCRAC capacity"
+    hints = registry.pad_hints([cfg.mech for cfg in shape_grid])
+    shape = sim_shape(c0, n_sets_max=n_sets_max)
     stacked = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs),
-        *[mech_params(cfg, n_nuat_bins=n_bins) for cfg in grid])
+        *[mech_params(cfg, hints=hints) for cfg in grid])
     return shape, stacked
 
 
 def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
-          pad_steps: bool = False, rltl: bool = True) -> list[dict]:
+          pad_steps: bool = False, rltl: bool = True,
+          shape_grid: Sequence[SimConfig] | None = None) -> list[dict]:
     """Evaluate every configuration in ``grid`` on ``batch`` in one call.
 
     The whole grid — any mix of the five mechanism kinds, HCRAC
@@ -660,11 +628,13 @@ def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
     set then shares a single compilation — the compile-once/run-many mode
     the benchmarks use.  ``rltl=False`` skips event collection (the
     stats dicts then carry ``rltl_hist=None``) — substantially faster and
-    smaller when the RLTL histogram isn't needed.
+    smaller when the RLTL histogram isn't needed.  ``shape_grid`` lets a
+    caller pad shapes for a larger grid than it launches (the experiment
+    runner's chunking mode; see ``_grid_shape_and_params``).
     """
     grid = list(grid)
     assert grid, "empty sweep grid"
-    shape, stacked = _grid_shape_and_params(grid)
+    shape, stacked = _grid_shape_and_params(grid, shape_grid)
 
     trace = _device_trace(batch)
     n_req = int(batch.length.sum())
@@ -692,7 +662,9 @@ def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
 
 
 def sweep_traces(batches: Sequence[TraceBatch], grid: Sequence[SimConfig],
-                 rltl: bool = False) -> list[list[dict]]:
+                 rltl: bool = False,
+                 shape_grid: Sequence[SimConfig] | None = None
+                 ) -> list[list[dict]]:
     """Evaluate a config grid over *several* trace batches in one call.
 
     The full evaluation matrix — every (workload batch, configuration)
@@ -713,7 +685,7 @@ def sweep_traces(batches: Sequence[TraceBatch], grid: Sequence[SimConfig],
     for b in batches:
         assert b.gap.shape == tshape, \
             "sweep_traces requires same-shape trace batches"
-    shape, stacked = _grid_shape_and_params(grid)
+    shape, stacked = _grid_shape_and_params(grid, shape_grid)
 
     traces = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs),

@@ -1,0 +1,42 @@
+"""repro.experiment — the declarative front door over the sweep engine.
+
+Layers (DESIGN.md §7):
+
+- ``registry``  — the mechanism registry: ``@register_mechanism`` policy
+  objects that contribute traced param blocks + timing-selection logic
+  to the simulator's scan body.  (Implementation:
+  ``repro.core.mechanisms`` — the simulator needs it at import time, so
+  it lives in the core layer; this is its public face.)
+- ``spec``      — ``Experiment(traces=…, axes=…, metrics=…)``: named
+  axes expand into a ``SimConfig`` grid (extensible ``register_axis``).
+- ``runner``    — grid dedup, per-device-memory auto-chunking into
+  ``sweep()`` / ``sweep_traces()`` launches sharing one compile.
+- ``results``   — ``Results`` with labeled dims/coords: ``.sel()``,
+  ``.to_table()``, ``.to_json()`` / ``from_json()``.
+
+``spec``/``runner`` load lazily so that ``import repro.experiment``
+stays cheap when only the registry is needed.
+"""
+
+from repro.experiment import registry  # noqa: F401
+from repro.experiment.registry import (  # noqa: F401
+    MechanismPolicy, SelectCtx, default_nuat_bins, register_mechanism)
+
+_LAZY = {
+    "Experiment": "spec",
+    "register_axis": "spec",
+    "AXIS_BUILDERS": "spec",
+    "Results": "results",
+    "run_experiment": "runner",
+}
+
+__all__ = ["registry", "MechanismPolicy", "SelectCtx", "default_nuat_bins",
+           "register_mechanism", *_LAZY]
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        mod = importlib.import_module(f"repro.experiment.{_LAZY[name]}")
+        return getattr(mod, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

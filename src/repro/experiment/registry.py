@@ -1,0 +1,19 @@
+"""Public import path for the mechanism registry (DESIGN.md §7.2).
+
+The implementation lives in ``repro.core.mechanisms`` — the simulator
+imports it at module scope, so it must sit in the core layer to keep the
+import graph acyclic (``repro.experiment`` imports ``repro.core``, never
+the other way).  Everything is re-exported here because mechanism
+registration is conceptually part of the Experiment API::
+
+    from repro.experiment.registry import register_mechanism
+
+    @register_mechanism("my_policy")
+    class MyPolicy(MechanismPolicy):
+        ...
+"""
+
+from repro.core.mechanisms import *  # noqa: F401,F403
+from repro.core.mechanisms import (  # noqa: F401  (non-public helpers)
+    block_bearing, build_blocks, canonical_mech, components, get,
+    hcrac_gate, names, pad_hints, select_timings, temporary)

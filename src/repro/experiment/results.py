@@ -1,0 +1,193 @@
+"""Labeled experiment results (DESIGN.md §7.3).
+
+``Results`` is the dense, labeled view of an evaluation grid: an
+N-dimensional object array of per-point stats dicts (exactly what
+``simulate()`` returns) with named dims and coordinate labels, so
+consumers select by meaning —
+
+    res.sel(mechanism="chargecache", capacity=128)
+    res.metric("hcrac_hit_rate")            # ndarray over the grid
+    res.pairwise("mechanism", "base", fn)   # per-point vs-baseline values
+
+— instead of re-deriving axis indices from a flat list (the pre-PR-2
+per-benchmark bookkeeping).  ``to_json``/``from_json`` round-trip the
+whole grid for ``BENCH_results.json``-style artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+#: scalar stats every consumer wants by default (``simulate()`` keys)
+DEFAULT_METRICS = ("total_cycles", "avg_latency", "hcrac_hit_rate",
+                   "acts_lowered_frac", "row_hit_rate", "rmpkc")
+
+
+def _encode_value(v):
+    if isinstance(v, np.ndarray):
+        return {"__ndarray__": v.tolist(), "dtype": str(v.dtype)}
+    if isinstance(v, np.generic):
+        return v.item()
+    return v
+
+
+def _decode_value(v):
+    if isinstance(v, dict) and "__ndarray__" in v:
+        return np.asarray(v["__ndarray__"], dtype=np.dtype(v["dtype"]))
+    return v
+
+
+@dataclasses.dataclass
+class Results:
+    """A labeled grid of per-point stats dicts.
+
+    ``cells`` is an object ndarray of shape ``tuple(len(coords[d]) for d
+    in dims)``; every element is one ``simulate()``-style stats dict.
+    """
+    dims: tuple[str, ...]
+    coords: dict[str, tuple]
+    cells: np.ndarray
+    metrics: tuple[str, ...] = DEFAULT_METRICS
+    meta: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self.dims = tuple(self.dims)
+        self.coords = {d: tuple(c) for d, c in self.coords.items()}
+        self.metrics = tuple(self.metrics)
+        expect = tuple(len(self.coords[d]) for d in self.dims)
+        assert self.cells.shape == expect, (self.cells.shape, expect)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.cells.shape
+
+    # ---------------------------------------------------------------- sel
+    def _coord_index(self, dim: str, label):
+        assert dim in self.dims, f"no dim {dim!r}; have {self.dims}"
+        try:
+            return self.coords[dim].index(label)
+        except ValueError:
+            raise KeyError(
+                f"{label!r} not in {dim!r} coords {self.coords[dim]}") from None
+
+    def sel(self, **labels) -> "Results":
+        """Select by coordinate label.  Scalar labels drop their dim;
+        list/tuple labels subset it.  Returns a new ``Results`` view."""
+        labels = dict(labels)
+        cells = self.cells
+        new_dims: list[str] = []
+        new_coords: dict[str, tuple] = {}
+        ax = 0
+        for d in self.dims:
+            if d not in labels:
+                new_dims.append(d)
+                new_coords[d] = self.coords[d]
+                ax += 1
+                continue
+            v = labels.pop(d)
+            if isinstance(v, (list, tuple)):
+                cells = np.take(cells, [self._coord_index(d, x) for x in v],
+                                axis=ax)
+                new_dims.append(d)
+                new_coords[d] = tuple(v)
+                ax += 1
+            else:
+                cells = np.take(cells, self._coord_index(d, v), axis=ax)
+        assert not labels, f"unknown dims {tuple(labels)}; have {self.dims}"
+        if not isinstance(cells, np.ndarray):  # fully-scalar sel -> 0-d
+            box = np.empty((), object)
+            box[()] = cells
+            cells = box
+        return Results(dims=tuple(new_dims), coords=new_coords,
+                       cells=cells, metrics=self.metrics, meta=self.meta)
+
+    def item(self) -> dict:
+        """The single stats dict of a fully-selected (0-d) result."""
+        assert self.cells.ndim == 0 or self.cells.size == 1, self.shape
+        return self.cells.reshape(())[()]
+
+    def point(self, **labels) -> dict:
+        """``sel(...)`` down to one grid point; returns its stats dict."""
+        return self.sel(**labels).item()
+
+    # ------------------------------------------------------------ metrics
+    def values(self, key: str) -> np.ndarray:
+        """Object ndarray of ``stats[key]`` over the grid (any dtype)."""
+        out = np.empty(self.shape, object)
+        for i, s in np.ndenumerate(self.cells):
+            out[i] = s.get(key)
+        return out
+
+    def metric(self, key: str) -> np.ndarray:
+        """Float ndarray of a scalar metric over the grid."""
+        return np.asarray(self.values(key).tolist(), dtype=float)
+
+    def pairwise(self, dim: str, base, fn: Callable[[dict, dict], float]
+                 ) -> dict:
+        """``fn(base_stats, stats)`` per point, against the ``base`` label
+        along ``dim``.  Returns ``{label: float ndarray over the other
+        dims}`` for every non-base label (e.g. per-mechanism speedups)."""
+        b = self.sel(**{dim: base})
+        out = {}
+        for label in self.coords[dim]:
+            if label == base:
+                continue
+            s = self.sel(**{dim: label})
+            vals = np.empty(b.shape, float)
+            for i in np.ndindex(b.shape or (1,)):
+                j = i if b.shape else ()
+                vals[j] = fn(b.cells[j], s.cells[j])
+            out[label] = vals
+        return out
+
+    # ------------------------------------------------------------- export
+    def to_table(self, metrics: Sequence[str] | None = None) -> list[dict]:
+        """One row per grid point: coord labels + the selected metrics."""
+        metrics = tuple(metrics) if metrics is not None else self.metrics
+        rows = []
+        for i, s in np.ndenumerate(self.cells):
+            row = {d: self.coords[d][k] for d, k in zip(self.dims, i)}
+            for m in metrics:
+                row[m] = _encode_value(s.get(m))
+            rows.append(row)
+        return rows
+
+    def to_json(self, path: str | None = None, full: bool = True) -> str:
+        """Serialize the labeled grid; ``full=False`` keeps only the
+        declared metrics per cell (compact artifact)."""
+        def cell(s):
+            keys = s.keys() if full else [m for m in self.metrics if m in s]
+            return {k: _encode_value(s[k]) for k in keys}
+        doc = {
+            "dims": list(self.dims),
+            "coords": {d: list(c) for d, c in self.coords.items()},
+            "metrics": list(self.metrics),
+            "meta": {k: _encode_value(v) for k, v in self.meta.items()},
+            "cells": [cell(s) for s in self.cells.flat],
+        }
+        text = json.dumps(doc, indent=2, sort_keys=True)
+        if path:
+            with open(path, "w") as f:
+                f.write(text)
+        return text
+
+    @classmethod
+    def from_json(cls, text: str) -> "Results":
+        doc = json.loads(text)
+        dims = tuple(doc["dims"])
+        coords = {d: tuple(c) for d, c in doc["coords"].items()}
+        shape = tuple(len(coords[d]) for d in dims)
+        cells = np.empty(shape, object)
+        flat = [{k: _decode_value(v) for k, v in c.items()}
+                for c in doc["cells"]]
+        assert len(flat) == cells.size, (len(flat), cells.size)
+        for i, s in zip(np.ndindex(shape or (1,)), flat):
+            cells[i if shape else ()] = s
+        return cls(dims=dims, coords=coords, cells=cells,
+                   metrics=tuple(doc.get("metrics", DEFAULT_METRICS)),
+                   meta={k: _decode_value(v)
+                         for k, v in doc.get("meta", {}).items()})

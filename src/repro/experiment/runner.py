@@ -1,0 +1,169 @@
+"""Experiment runner: dedup → chunk → launch → labeled Results.
+
+Data flow (DESIGN.md §7.1):
+
+1. ``Experiment.expand()`` turns the named axes into a flat ``SimConfig``
+   grid (C order over the axis coords).
+2. **Dedup**: grid points whose *canonical* configs coincide (knobs no
+   active mechanism policy consumes are stripped — a ``base`` point is
+   the same run at any HCRAC capacity) launch once and fan back out.
+3. **Chunking**: the unique grid splits into fixed-size chunks sized by
+   ``chunk_size`` or a per-device memory-budget estimate; every chunk is
+   padded to the same point count and every launch passes the *full*
+   grid as ``shape_grid``, so all chunks share one ``SimShape`` / one
+   stacked-params structure — and therefore exactly one XLA compilation.
+4. **Launch**: trace batches are grouped by core count (padded to the
+   group's longest trace — behaviour-neutral, DESIGN.md §4) and each
+   (group × chunk) goes through one ``sweep_traces()`` call — or plain
+   ``sweep()`` for a single unlabeled batch.  Chunk results stream back
+   through the optional ``progress`` callback as they complete.
+5. Cells assemble into a dense labeled ``Results``; per-trace extras
+   (``trace_metrics``) merge into every cell of their trace row.
+
+Every cell is bitwise-identical to a direct ``sweep()`` /
+``sweep_traces()`` of the same expanded grid (tests/test_experiment.py),
+chunked or not.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import jax
+import numpy as np
+
+from repro.core.simulator import SimConfig, sweep, sweep_traces
+from repro.core.traces import pad_batch_to
+from repro.experiment import registry
+from repro.experiment.results import Results
+from repro.experiment.spec import Experiment
+
+#: default per-device memory budget for auto-chunking (MiB)
+DEFAULT_BUDGET_MB = 1024.0
+
+
+def _canonical(cfg: SimConfig) -> SimConfig:
+    return dataclasses.replace(cfg, mech=registry.canonical_mech(cfg.mech))
+
+
+def _dedup(configs: list[SimConfig], enable: bool):
+    """Unique canonical configs + flat-index → unique-index map."""
+    if not enable:
+        return list(configs), list(range(len(configs)))
+    unique: list[SimConfig] = []
+    where: dict = {}
+    index_map = []
+    for cfg in configs:
+        key = _canonical(cfg)
+        if key not in where:
+            where[key] = len(unique)
+            unique.append(key)
+        index_map.append(where[key])
+    return unique, index_map
+
+
+def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
+                    n_cores: int, mshr: int, n_traces: int,
+                    rltl: bool) -> int:
+    """Rough per-grid-point device-memory estimate for one launch.
+
+    Dominant terms: the per-point HCRAC state (three int32 arrays, double
+    counted for the scan's in/out carry) and — when events are collected
+    for RLTL — the per-step event stream (7 int32 scan outputs).  The
+    trace itself is shared across the grid axis and excluded.  With
+    ``sweep_traces`` the whole thing multiplies by the batch axis.
+    """
+    per = 4096  # carry scalars, stats, issue-model state, slack
+    per += n_sets_max * n_ways * 3 * 4 * 2
+    per += n_cores * (mshr + 8) * 4
+    if rltl:
+        per += 7 * 4 * n_steps
+    return per * max(1, n_traces)
+
+
+def _auto_chunk(unique: list[SimConfig], groups, rltl: bool,
+                budget_mb: float | None) -> int:
+    budget_mb = (budget_mb if budget_mb is not None else
+                 float(os.environ.get("REPRO_EXP_BUDGET_MB",
+                                      DEFAULT_BUDGET_MB)))
+    n_sets_max = max(c.mech.hcrac.n_sets for c in unique)
+    n_ways = unique[0].mech.hcrac.n_ways
+    worst = 1
+    for batches in groups.values():
+        n_cores, max_len = batches[0][1].gap.shape[0], max(
+            b.gap.shape[1] for _, b in batches)
+        worst = max(worst, bytes_per_point(
+            n_steps=n_cores * max_len, n_sets_max=n_sets_max,
+            n_ways=n_ways, n_cores=n_cores, mshr=unique[0].mshr,
+            n_traces=len(batches), rltl=rltl))
+    ndev = max(1, len(jax.devices()))
+    budget = budget_mb * 2**20 * ndev
+    chunk = int(max(1, budget // worst))
+    if chunk >= ndev:
+        chunk = (chunk // ndev) * ndev  # keep launches device-aligned
+    return min(chunk, len(unique))
+
+
+def run_experiment(exp: Experiment, progress=None) -> Results:
+    labeled, trace_items = exp.trace_items()
+    cfg_dims, cfg_coords, configs = exp.expand()
+    if not configs:
+        configs = [exp.base]
+    unique, index_map = _dedup(configs, exp.dedup)
+
+    # group traces by core count; pad within a group to the longest trace
+    groups: dict[int, list] = {}
+    for pos, (label, batch) in enumerate(trace_items):
+        groups.setdefault(batch.gap.shape[0], []).append((pos, batch))
+
+    chunk = exp.chunk_size or _auto_chunk(unique, groups, exp.rltl,
+                                          exp.memory_budget_mb)
+    chunk = max(1, min(chunk, len(unique)))
+    chunks = [unique[i:i + chunk] for i in range(0, len(unique), chunk)]
+    n_valid = [len(c) for c in chunks]
+    # pad the tail chunk so every launch shares one stacked-params shape
+    chunks = [c + [c[-1]] * (chunk - len(c)) for c in chunks]
+
+    total = len(trace_items) * len(unique)
+    done = 0
+    by_trace: list[list] = [[None] * len(unique) for _ in trace_items]
+    single = not labeled and len(trace_items) == 1
+    for batches in groups.values():
+        max_len = max(b.gap.shape[1] for _, b in batches)
+        padded = [pad_batch_to(b, max_len) for _, b in batches]
+        for ci, cfgs in enumerate(chunks):
+            if single:
+                rows = [sweep(padded[0], cfgs, rltl=exp.rltl,
+                              shape_grid=unique)]
+            else:
+                rows = sweep_traces(padded, cfgs, rltl=exp.rltl,
+                                    shape_grid=unique)
+            for (pos, _), row in zip(batches, rows):
+                by_trace[pos][ci * chunk:ci * chunk + n_valid[ci]] = \
+                    row[:n_valid[ci]]
+            done += len(batches) * n_valid[ci]
+            if progress is not None:
+                progress(done, total)
+
+    # assemble the dense labeled grid (fan dedup'd runs back out)
+    dims = ((exp.trace_dim,) + cfg_dims) if labeled else cfg_dims
+    coords = dict(cfg_coords)
+    if labeled:
+        coords[exp.trace_dim] = tuple(label for label, _ in trace_items)
+    shape = tuple(len(coords[d]) for d in dims)
+    cells = np.empty(shape, object)
+    cfg_shape = tuple(len(cfg_coords[d]) for d in cfg_dims)
+    for t, (label, _) in enumerate(trace_items):
+        extra = dict((exp.trace_metrics or {}).get(label, {}))
+        for flat, u in enumerate(index_map):
+            idx = np.unravel_index(flat, cfg_shape) if cfg_shape else ()
+            full = ((t,) + tuple(idx)) if labeled else tuple(idx)
+            cells[full] = {**by_trace[t][u], **extra}
+
+    return Results(
+        dims=dims, coords=coords, cells=cells, metrics=tuple(exp.metrics),
+        meta={"n_points": len(configs) * len(trace_items),
+              "n_configs": len(configs), "n_unique": len(unique),
+              "chunk_size": chunk, "n_chunks": len(chunks),
+              "n_launches": len(chunks) * len(groups)})

@@ -1,0 +1,157 @@
+"""Declarative experiment specs (DESIGN.md §7.1).
+
+``Experiment`` is the front door over the PR-1 sweep engine: named axes
+expand into the ``SimConfig`` grid, the runner dedups / chunks /
+launches it, and the caller gets a labeled ``Results``::
+
+    Experiment(
+        traces={"milc_like": batch, ...},      # labeled trace axis
+        axes={"mechanism": ["base", "chargecache"],
+              "capacity": (32, 128, 1024)},    # cartesian config axes
+    ).run().sel(mechanism="chargecache", capacity=128)
+
+Axis semantics live in ``AXIS_BUILDERS`` — small ``(cfg, value) -> cfg``
+functions keyed by axis name, extensible with ``@register_axis`` (the
+mechanism axis itself defers to the mechanism registry, so a freshly
+registered policy is sweepable with zero changes here).  Axis values may
+be plain labels, a ``{label: value}`` mapping, or ``(label, value)``
+pairs when the applied value should differ from the coordinate label
+(e.g. per-core HCRAC capacities labeled by the per-core count).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+from repro.core.simulator import SimConfig
+from repro.core.timing import lowered_for_duration, ms_to_cycles
+from repro.experiment.results import DEFAULT_METRICS, Results
+
+AXIS_BUILDERS: dict[str, Callable[[SimConfig, Any], SimConfig]] = {}
+
+
+def register_axis(name: str):
+    """Register an axis builder: ``fn(cfg, value) -> new cfg``."""
+    def deco(fn):
+        AXIS_BUILDERS[name] = fn
+        return fn
+    return deco
+
+
+@register_axis("mechanism")
+def _axis_mechanism(cfg: SimConfig, kind: str) -> SimConfig:
+    return dataclasses.replace(
+        cfg, mech=dataclasses.replace(cfg.mech, kind=kind))
+
+
+@register_axis("capacity")
+def _axis_capacity(cfg: SimConfig, n_entries: int) -> SimConfig:
+    hcrac = dataclasses.replace(cfg.mech.hcrac, n_entries=int(n_entries))
+    return dataclasses.replace(
+        cfg, mech=dataclasses.replace(cfg.mech, hcrac=hcrac))
+
+
+@register_axis("duration_ms")
+def _axis_duration(cfg: SimConfig, ms: float) -> SimConfig:
+    """Caching duration: sets the HCRAC expiry *and* the lowered timing
+    set the charge model derives for that duration (Table 6.1)."""
+    hcrac = dataclasses.replace(cfg.mech.hcrac,
+                                caching_cycles=ms_to_cycles(ms))
+    mech = dataclasses.replace(cfg.mech, hcrac=hcrac,
+                               lowered=lowered_for_duration(ms))
+    return dataclasses.replace(cfg, mech=mech)
+
+
+@register_axis("policy")
+def _axis_policy(cfg: SimConfig, policy: str) -> SimConfig:
+    return dataclasses.replace(cfg, policy=policy)
+
+
+@register_axis("timing")
+def _axis_timing(cfg: SimConfig, timing) -> SimConfig:
+    return dataclasses.replace(cfg, timing=timing)
+
+
+def _axis_items(values) -> list[tuple[Any, Any]]:
+    """Normalize one axis spec to ``[(label, applied value), ...]``."""
+    if isinstance(values, Mapping):
+        return list(values.items())
+    out = []
+    for v in values:
+        if isinstance(v, tuple) and len(v) == 2:
+            out.append((v[0], v[1]))
+        else:
+            out.append((v, v))
+    return out
+
+
+@dataclasses.dataclass
+class Experiment:
+    """A declarative evaluation grid: traces × named config axes.
+
+    - ``traces``: one ``TraceBatch``, a ``{label: batch}`` mapping (adds
+      a leading ``trace_dim`` to the Results), or a sequence (labeled by
+      index).
+    - ``axes``: ``{axis_name: values}`` expanded cartesian, in insertion
+      order, through ``AXIS_BUILDERS`` on top of ``base``.
+    - ``chunk_size`` / ``memory_budget_mb``: the runner splits the config
+      grid into multiple ``sweep()`` launches of this many points (or an
+      auto estimate that fits the per-device budget); all chunks share
+      one compilation (``shape_grid`` padding).
+    - ``trace_metrics``: extra per-trace scalars (e.g. a scheduler's
+      hot-page hit rate) merged into every cell of that trace row.
+    - ``dedup``: launch each *behaviourally distinct* config once (grid
+      points differing only in knobs their mechanism ignores — see
+      ``registry.canonical_mech`` — share one run, bitwise-identically).
+    """
+    traces: Any
+    axes: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    metrics: Sequence[str] = DEFAULT_METRICS
+    base: SimConfig = dataclasses.field(default_factory=SimConfig)
+    rltl: bool = False
+    trace_dim: str = "trace"
+    chunk_size: int | None = None
+    memory_budget_mb: float | None = None
+    trace_metrics: Mapping[Any, Mapping[str, Any]] | None = None
+    dedup: bool = True
+
+    def expand(self):
+        """The config grid: ``(dims, coords, configs)`` with ``configs``
+        flat in C order over the axis coords (trace axis excluded)."""
+        dims = tuple(self.axes)
+        items = {d: _axis_items(self.axes[d]) for d in dims}
+        coords = {d: tuple(l for l, _ in items[d]) for d in dims}
+        for d in dims:
+            assert d in AXIS_BUILDERS, (
+                f"unknown axis {d!r}; registered: {tuple(AXIS_BUILDERS)}")
+            assert items[d], f"empty axis {d!r}"
+        configs = []
+
+        def rec(cfg, rest):
+            if not rest:
+                configs.append(cfg)
+                return
+            d, *tail = rest
+            for _, value in items[d]:
+                rec(AXIS_BUILDERS[d](cfg, value), tail)
+
+        rec(self.base, list(dims))
+        return dims, coords, configs
+
+    def trace_items(self):
+        """``(labeled, [(label, batch), ...])``; unlabeled single batches
+        get no trace dim in the Results."""
+        t = self.traces
+        if hasattr(t, "gap"):  # a single TraceBatch (NamedTuple, so check
+            return False, [(None, t)]  # before the tuple branch)
+        if isinstance(t, Mapping):
+            return True, list(t.items())
+        if isinstance(t, (list, tuple)):
+            return True, list(enumerate(t))
+        return False, [(None, t)]
+
+    def run(self, progress: Callable[[int, int], None] | None = None
+            ) -> Results:
+        from repro.experiment.runner import run_experiment
+        return run_experiment(self, progress=progress)

@@ -1,0 +1,62 @@
+"""Scheduler-policy study through the Experiment API (DESIGN.md §2.2, §7).
+
+The closed loop: the continuous-batching scheduler runs with FIFO vs
+charge-aware admission, each emits its page-access trace, and both
+traces evaluate against a mechanism grid in a *single* compiled
+``sweep_traces`` launch (policy × mechanism — the serving analogue of
+the thesis's workload × mechanism matrix).  The scheduler's own hot-page
+hit rate rides along as a per-grid-point metric (``hot_frac``), so the
+Results carry the scheduler-level and DRAM-level views of the same run
+side by side.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.hcrac import HCRACConfig
+from repro.core.simulator import MechanismConfig, SimConfig
+from repro.core.timing import lowered_for_duration, ms_to_cycles
+from repro.experiment import Experiment
+from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+
+
+def build_scheduler(charge_aware: bool, n_reqs: int = 48, steps: int = 120,
+                    max_batch: int = 16, seed: int = 11) -> Scheduler:
+    """Run the decode loop and return the scheduler (with its trace)."""
+    cfg = SchedulerConfig(max_batch=max_batch, charge_aware=charge_aware)
+    sched = Scheduler(cfg)
+    rng = np.random.default_rng(seed)
+    for rid in range(n_reqs):
+        sched.submit(Request(rid=rid,
+                             prompt_len=int(rng.integers(2048, 16384)),
+                             max_new=int(rng.integers(16, 64))))
+    sched.run(steps)
+    return sched
+
+
+def policy_experiment(mechanisms=("base", "chargecache"),
+                      n_entries: int = 1024, caching_ms: float = 1.0,
+                      n_reqs: int = 48, steps: int = 120, seed: int = 11,
+                      **kw) -> Experiment:
+    """The (scheduler policy × mechanism) grid as one Experiment.
+
+    Returns an unexecuted spec; ``.run()`` evaluates every cell in one
+    ``sweep_traces`` compile per chunk and labels the Results with dims
+    ``(policy, mechanism)`` plus the per-policy ``hot_frac`` metric.
+    """
+    traces, trace_metrics = {}, {}
+    for label, aware in (("fifo", False), ("charge_aware", True)):
+        sched = build_scheduler(aware, n_reqs=n_reqs, steps=steps, seed=seed)
+        traces[label] = sched.emit_trace()
+        trace_metrics[label] = {
+            "hot_frac": (sched.stats["hot_hits"]
+                         / max(sched.stats["probes"], 1))}
+    base = SimConfig(mech=MechanismConfig(
+        kind="base",
+        hcrac=HCRACConfig(n_entries=n_entries,
+                          caching_cycles=ms_to_cycles(caching_ms)),
+        lowered=lowered_for_duration(caching_ms)))
+    return Experiment(traces=traces, axes={"mechanism": list(mechanisms)},
+                      base=base, trace_dim="policy",
+                      trace_metrics=trace_metrics, **kw)

@@ -1,0 +1,199 @@
+"""Experiment API: labeled Results, chunked parity, mechanism registry.
+
+Contracts (DESIGN.md §7):
+
+* ``Experiment.run()`` is bitwise-identical to direct ``sweep()`` /
+  ``sweep_traces()`` of the same expanded grid — including when the grid
+  is forced to chunk into several launches, which must share exactly one
+  compilation.
+* ``Results`` label selection and ``to_json``/``from_json`` round-trip.
+* A new mechanism plugs in through ``@register_mechanism`` with zero
+  simulator edits.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HCRACConfig, MechanismConfig, SimConfig, simulate,
+                        sweep, sweep_traces)
+from repro.core import simulator as sim_mod
+from repro.core.traces import pad_batch_to, single_core_batch
+from repro.experiment import (Experiment, MechanismPolicy, Results, registry,
+                              register_mechanism)
+
+#: exact-int stats shared by every launch mode (events are off by default)
+BITWISE_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
+                "hcrac_lookups", "row_hits", "row_closed", "row_conflicts",
+                "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts",
+                "total_cycles")
+
+
+def _assert_cell_matches(ref: dict, got: dict):
+    for k in BITWISE_KEYS:
+        assert int(ref[k]) == int(got[k]), k
+    assert np.array_equal(ref["core_end"], got["core_end"])
+
+
+def test_experiment_matches_sweep_even_chunked():
+    """Axes expansion + dedup + chunking reproduce a direct sweep() of the
+    expanded grid bitwise, and >= 2 chunked launches share one compile."""
+    batch = single_core_batch("milc_like", 1777, seed=9)  # distinctive shape
+    exp = Experiment(traces=batch,
+                     axes={"mechanism": ["base", "chargecache", "lldram"],
+                           "capacity": (48, 96)},
+                     chunk_size=2)
+    before = sim_mod._run_batched._cache_size()
+    res = exp.run()
+    compiles = sim_mod._run_batched._cache_size() - before
+    assert res.meta["n_chunks"] >= 2
+    assert compiles == 1, "chunked launches must share one compilation"
+    assert res.dims == ("mechanism", "capacity")
+    # base dedups across the capacity axis
+    assert res.meta["n_unique"] < res.meta["n_configs"]
+
+    _, _, cfgs = exp.expand()
+    for ref, got in zip(sweep(batch, cfgs, rltl=False), res.cells.flat):
+        _assert_cell_matches(ref, got)
+
+
+def test_experiment_matches_sweep_traces_mixed_lengths():
+    """Labeled traces of different lengths pad into one sweep_traces()
+    launch (one compile for the whole trace x mechanism matrix); every
+    cell is bitwise-identical to the direct call."""
+    batches = {"milc_like": single_core_batch("milc_like", 1531, seed=5),
+               "hmmer_like": single_core_batch("hmmer_like", 1531, seed=5)}
+    exp = Experiment(traces=batches, trace_dim="workload",
+                     axes={"mechanism": ["base", "chargecache", "nuat"]})
+    before = sim_mod._run_grid._cache_size()
+    res = exp.run()
+    assert sim_mod._run_grid._cache_size() - before == 1, \
+        "a trace x config matrix must run in one compile per chunk"
+    assert res.dims == ("workload", "mechanism")
+
+    _, _, cfgs = exp.expand()
+    max_len = max(b.gap.shape[1] for b in batches.values())
+    ref = sweep_traces([pad_batch_to(b, max_len) for b in batches.values()],
+                       cfgs)
+    for bi in range(len(batches)):
+        for gi in range(len(cfgs)):
+            _assert_cell_matches(ref[bi][gi], res.cells[bi, gi])
+
+
+def test_results_label_selection_roundtrips():
+    batch = single_core_batch("lbm_like", 900, seed=2)
+    res = Experiment(traces=batch,
+                     axes={"mechanism": ["base", "chargecache"],
+                           "capacity": (32, 64, 128)}).run()
+    # scalar sel drops the dim; list sel subsets it
+    cc = res.sel(mechanism="chargecache")
+    assert cc.dims == ("capacity",) and cc.shape == (3,)
+    sub = res.sel(capacity=[64, 128])
+    assert sub.coords["capacity"] == (64, 128)
+    # a fully-selected point equals direct indexing
+    assert res.point(mechanism="chargecache", capacity=64) is not None
+    assert (res.sel(mechanism="chargecache", capacity=64).item()
+            ["total_cycles"] == res.cells[1, 1]["total_cycles"])
+    # hit rate grows with capacity on the selected row
+    hits = cc.metric("hcrac_hit_rate")
+    assert hits.shape == (3,) and hits[0] <= hits[-1] + 0.02
+    assert len(res.to_table()) == 6
+    with pytest.raises(KeyError):
+        res.sel(mechanism="nope")
+
+
+def test_results_json_roundtrip():
+    batch = single_core_batch("gcc_like", 800, seed=4)
+    res = Experiment(traces={"gcc_like": batch}, trace_dim="workload",
+                     axes={"mechanism": ["base", "chargecache"]},
+                     trace_metrics={"gcc_like": {"note": 0.5}}).run()
+    back = Results.from_json(res.to_json())
+    assert back.dims == res.dims and back.coords == res.coords
+    assert back.metrics == res.metrics
+    for a, b in zip(res.cells.flat, back.cells.flat):
+        for k in BITWISE_KEYS:
+            assert int(a[k]) == int(b[k]), k
+        assert np.array_equal(a["core_end"], b["core_end"])
+        assert a["rltl_hist"] is None and b["rltl_hist"] is None
+        assert a["note"] == b["note"] == 0.5
+
+
+def test_toy_mechanism_plugs_in_without_simulator_edits():
+    """A registry entry cloning LL-DRAM's policy must behave identically
+    to the builtin — proving mechanism semantics live entirely in the
+    registry (zero edits to simulator.py)."""
+    batch = single_core_batch("soplex_like", 1200, seed=7)
+
+    with registry.temporary():
+        @register_mechanism("turbo")
+        class Turbo(MechanismPolicy):
+            consumes = ("lowered",)
+
+            def block(self, mech, timing, enabled, hints):
+                low = timing if mech is None else mech.lowered
+                return {"enable": jnp.bool_(enabled),
+                        "tRCD": jnp.int32(low.tRCD),
+                        "tRAS": jnp.int32(low.tRAS)}
+
+            def select(self, block, ctx, rcd, ras):
+                rcd = jnp.where(block["enable"], block["tRCD"], rcd)
+                ras = jnp.where(block["enable"], block["tRAS"], ras)
+                return rcd, ras
+
+        assert "turbo" in registry.names()
+        toy = simulate(batch, SimConfig(mech=MechanismConfig(kind="turbo")))
+        ref = simulate(batch, SimConfig(mech=MechanismConfig(kind="lldram")))
+        _assert_cell_matches(ref, toy)
+        # ... and it is sweepable through the declarative axis
+        res = Experiment(traces=batch,
+                         axes={"mechanism": ["base", "turbo"]}).run()
+        _assert_cell_matches(ref, res.point(mechanism="turbo"))
+
+    # the temporary entry is gone and unknown kinds are rejected
+    assert "turbo" not in registry.names()
+    with pytest.raises(AssertionError):
+        MechanismConfig(kind="turbo")
+
+
+def test_import_order_is_cycle_free():
+    """`from repro.experiment import Experiment` must work in a FRESH
+    interpreter (regression: the registry once lived above repro.core,
+    making the documented front-door import order-dependent)."""
+    import subprocess
+    import sys
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "from repro.experiment import Experiment, register_mechanism; "
+         "from repro.experiment.registry import names; "
+         "assert 'chargecache' in names()"],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_dedup_preserves_hcrac_grid_uniformity():
+    """Dedup canonicalization must not reset shape fields (n_ways /
+    exact_expiry) that sweep() requires to be grid-uniform."""
+    batch = single_core_batch("lbm_like", 700, seed=1)
+    base = SimConfig(mech=MechanismConfig(
+        kind="base", hcrac=HCRACConfig(n_entries=128, n_ways=4)))
+    res = Experiment(traces=batch, base=base,
+                     axes={"mechanism": ["base", "chargecache"]}).run()
+    assert res.meta["n_unique"] == 2
+    assert int(res.point(mechanism="base")["total_cycles"]) > 0
+
+
+def test_memory_budget_forces_chunking():
+    """A tiny memory budget must split the grid (and stay bitwise-equal
+    to the unchunked run)."""
+    batch = single_core_batch("milc_like", 1000, seed=3)
+    axes = {"mechanism": ["chargecache"], "capacity": (32, 64, 128, 256)}
+    small = Experiment(traces=batch, axes=axes, rltl=True,
+                       memory_budget_mb=0.05).run()
+    whole = Experiment(traces=batch, axes=axes, rltl=True).run()
+    assert small.meta["n_chunks"] >= 2
+    assert whole.meta["n_chunks"] == 1
+    for a, b in zip(small.cells.flat, whole.cells.flat):
+        _assert_cell_matches(a, b)
+        assert np.array_equal(a["rltl_hist"], b["rltl_hist"])

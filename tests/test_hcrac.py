@@ -7,6 +7,7 @@ mechanism's safety property (a stale hit would under-time a leaky row).
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
 from repro.core import hcrac as H
@@ -49,6 +50,7 @@ def test_lru_eviction():
     assert bool(H.lookup(cfg, st_, jnp.int32(3), jnp.int32(5))[0])
 
 
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(st.lists(st.tuples(st.integers(0, 200), st.integers(1, 50)),
                 min_size=1, max_size=60),
@@ -75,6 +77,7 @@ def test_no_stale_hits(ops, probe_gid, exact):
         assert probe_t - last_insert[probe_gid] <= cfg.caching_cycles
 
 
+@pytest.mark.slow
 @settings(max_examples=60, deadline=None)
 @given(st.integers(0, 10_000), st.integers(0, 2_000), st.integers(0, 31))
 def test_sweep_alive_implies_within_duration(itime, dt, set_idx):

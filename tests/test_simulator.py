@@ -109,6 +109,7 @@ def test_refresh_fraction_near_eighth():
     assert 0.08 <= f["refresh_8ms_frac"] <= 0.18
 
 
+@pytest.mark.slow
 @settings(max_examples=12, deadline=None)
 @given(st.integers(0, 2**31 - 1), st.sampled_from(["open", "closed"]))
 def test_property_latency_bounds(seed, policy):

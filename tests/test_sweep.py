@@ -42,6 +42,7 @@ def _assert_point_matches(ref: dict, got: dict):
     assert np.array_equal(ref["rltl_hist"], got["rltl_hist"])
 
 
+@pytest.mark.slow
 def test_sweep_matches_simulate_all_mechanisms():
     """All five mechanism kinds + capacity/duration variants in one grid
     must reproduce per-config simulate() bitwise."""
@@ -66,6 +67,7 @@ def test_sweep_matches_simulate_multicore_closed():
         _assert_point_matches(simulate(batch, cfg), got)
 
 
+@pytest.mark.slow
 def test_pad_steps_is_a_noop():
     """Padding the scan length to the trace capacity (compile-sharing
     mode) must not change any statistic."""
@@ -80,6 +82,7 @@ def test_pad_steps_is_a_noop():
         _assert_point_matches(e, p)
 
 
+@pytest.mark.slow
 def test_capacity_x_duration_grid_compiles_once():
     """A >= 20-point capacity x duration grid runs through one sweep()
     call with exactly one compilation of the batched scan."""
@@ -108,6 +111,7 @@ def test_capacity_x_duration_grid_compiles_once():
     assert hit[(1024, one_ms)] >= hit[(32, one_ms)]
 
 
+@pytest.mark.slow
 def test_sweep_traces_matches_simulate():
     """The nested-vmap (trace x config) matrix must reproduce per-config
     simulate() bitwise on every cell, with per-batch warm-up."""
