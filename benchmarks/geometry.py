@@ -1,0 +1,78 @@
+"""Table 5.1 geometry sensitivity: channel/bank sweeps as ONE compiled grid.
+
+The thesis evaluates ChargeCache across DRAM configurations (Table 5.1:
+DDR3-1600, 1-2 channels, 8 banks/rank).  Fewer channels (and fewer
+banks) concentrate the same request stream onto fewer row buffers, so
+bank conflicts — and therefore highly-charged-row re-activations — grow,
+and ChargeCache's speedup *increases* as the channel count drops (the
+thesis's channel-sensitivity direction).
+
+With traced geometry (DESIGN.md §8) the whole geometry × mechanism ×
+trace matrix pads into one ``DRAMEnvelope`` and runs through a single
+XLA compilation: the 1-vs-2-channel comparison costs one launch instead
+of one recompile per geometry.  Emits ``BENCH_geometry.json`` (labeled
+cells + per-geometry speedups).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import weighted_speedup
+from repro.core import simulator as sim_mod
+
+GEOMETRY_JSON = os.environ.get("REPRO_BENCH_GEOMETRY_JSON",
+                               "BENCH_geometry.json")
+
+#: thesis direction: ordering is over *decreasing* parallelism
+GEOMS = ("ddr3_2ch", "ddr3_1ch", "ddr3_1ch_4bank")
+MECHS = ("base", "chargecache", "nuat", "lldram")
+
+
+def geometry_grid():
+    """(geometry × mechanism) over two 8-core mixes, one compile."""
+    before = sim_mod._run_grid._cache_size()
+    res = C.experiment_mixes(C.random_mixes(2, 8),
+                             axes={"geometry": list(GEOMS),
+                                   "mechanism": list(MECHS)})
+    compiles = sim_mod._run_grid._cache_size() - before
+    return res, compiles
+
+
+def run() -> list[str]:
+    (res, compiles), us = C.timed(geometry_grid)
+
+    # per-geometry ChargeCache weighted speedup, averaged over the mixes
+    speedup = {}
+    for g in GEOMS:
+        row = res.sel(geometry=g)
+        sp = row.pairwise(
+            "mechanism", "base",
+            lambda b, s: weighted_speedup(b["core_end"], s["core_end"]))
+        speedup[g] = {m: float(np.mean(v)) for m, v in sp.items()}
+
+    doc = {
+        "speedup_by_geometry": speedup,
+        "compiles": compiles,
+        "cells": res.to_table(),
+        "meta": res.meta,
+    }
+    with open(GEOMETRY_JSON, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+
+    cc1 = speedup["ddr3_1ch"]["chargecache"]
+    cc2 = speedup["ddr3_2ch"]["chargecache"]
+    cc4b = speedup["ddr3_1ch_4bank"]["chargecache"]
+    return [C.csv_row(
+        "geometry_channel_sensitivity", us,
+        f"compiles={compiles};cc_2ch={cc2:.4f};cc_1ch={cc1:.4f}"
+        f";cc_1ch4b={cc4b:.4f};ordering_ok={int(cc1 >= cc2)}")]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -44,7 +44,7 @@ def _record(results: dict, row: str) -> None:
 
 def main() -> None:
     from benchmarks import (capacity, charge_model_bench, duration, energy,
-                            kernels_bench, rltl, roofline_bench,
+                            geometry, kernels_bench, rltl, roofline_bench,
                             serving_trace, speedup, sweep_bench)
     mods = [
         ("charge_model", charge_model_bench),
@@ -54,6 +54,7 @@ def main() -> None:
         ("energy", energy),
         ("capacity", capacity),
         ("duration", duration),
+        ("geometry", geometry),
         ("serving", serving_trace),
         ("kernels", kernels_bench),
         ("roofline", roofline_bench),

@@ -17,7 +17,9 @@ import numpy as np
 from benchmarks import common as C
 from repro.core import weighted_speedup
 
-MECHS = ("chargecache", "nuat", "cc_nuat", "lldram")
+#: registry entries under study — ``rltl`` (arXiv:1805.03969 as a
+#: mechanism: per-bank last-precharged-row registers) rides the same axis
+MECHS = ("chargecache", "nuat", "cc_nuat", "rltl", "lldram")
 
 
 def single_core() -> dict:
@@ -55,14 +57,16 @@ def run() -> list[str]:
     rows.append(C.csv_row(
         "speedup_fig6.1_single", us1,
         f"cc={a['chargecache']:.4f};nuat={a['nuat']:.4f}"
-        f";cc_nuat={a['cc_nuat']:.4f};lldram={a['lldram']:.4f}"
+        f";cc_nuat={a['cc_nuat']:.4f};rltl={a['rltl']:.4f}"
+        f";lldram={a['lldram']:.4f}"
         f";cc_max={res1['max']['chargecache']:.4f}"))
     res8, us8 = C.timed(eight_core)
     a8 = res8["avg"]
     rows.append(C.csv_row(
         "speedup_fig6.1_eight", us8,
         f"cc={a8['chargecache']:.4f};nuat={a8['nuat']:.4f}"
-        f";cc_nuat={a8['cc_nuat']:.4f};lldram={a8['lldram']:.4f}"
+        f";cc_nuat={a8['cc_nuat']:.4f};rltl={a8['rltl']:.4f}"
+        f";lldram={a8['lldram']:.4f}"
         f";lowered_frac={res8['lowered_frac']:.3f}"))
     return rows
 

@@ -3,12 +3,15 @@
 Run:  PYTHONPATH=src python examples/chargecache_sim.py [--workload mcf_like]
       PYTHONPATH=src python examples/chargecache_sim.py --eight-core
       PYTHONPATH=src python examples/chargecache_sim.py --heat-grid
+      PYTHONPATH=src python examples/chargecache_sim.py --geo-grid
 
 Everything goes through the declarative Experiment API (DESIGN.md §7):
-the mechanism table is a one-axis spec, and ``--heat-grid`` is a
-mechanism × capacity × duration grid — the runner dedups the shared
-baseline, evaluates the rest through single compiled ``sweep()``
-launches, and the labeled ``Results`` replace all grid-index loops.
+the mechanism table is a one-axis spec, ``--heat-grid`` is a mechanism ×
+capacity × duration grid, and ``--geo-grid`` sweeps DRAM geometry
+(channel/bank presets, traced end to end per DESIGN.md §8) × mechanism
+— the runner dedups the shared baseline, evaluates the rest through
+single compiled ``sweep()`` launches, and the labeled ``Results``
+replace all grid-index loops.
 """
 
 import argparse
@@ -21,7 +24,9 @@ from repro.core.traces import (WORKLOADS, multicore_batch, random_mixes,
                                single_core_batch)
 from repro.experiment import Experiment
 
-MECHS = ("base", "chargecache", "nuat", "cc_nuat", "lldram")
+MECHS = ("base", "chargecache", "nuat", "cc_nuat", "rltl", "lldram")
+
+GEO_PRESETS = ("ddr3_2ch", "ddr3_1ch", "ddr3_1ch_4bank")
 
 HEAT_CAPS = (32, 64, 128, 256, 512, 1024)
 HEAT_DURATIONS_MS = (0.5, 1.0, 2.0, 4.0, 16.0)
@@ -65,6 +70,28 @@ def heat_grid(batch, policy: str) -> None:
             for j in range(len(HEAT_DURATIONS_MS))))
 
 
+def geo_grid(batch, policy: str) -> None:
+    """geometry x mechanism in one compile (channel sensitivity)."""
+    t0 = time.time()
+    res = Experiment(
+        traces=batch,
+        axes={"geometry": list(GEO_PRESETS),
+              "mechanism": ["base", "chargecache", "lldram"]},
+        base=SimConfig(policy=policy)).run()
+    dt = time.time() - t0
+    print(f"\ngeometry x mechanism grid ({res.meta['n_unique']} unique "
+          f"runs, one compile) in {dt:.1f}s")
+    print(f"{'geometry':>16s} {'cc speedup':>11s} {'ll speedup':>11s} "
+          f"{'conflicts':>10s}")
+    for g in GEO_PRESETS:
+        b = res.point(geometry=g, mechanism="base")
+        cc = res.point(geometry=g, mechanism="chargecache")
+        ll = res.point(geometry=g, mechanism="lldram")
+        sp = lambda r: weighted_speedup(b["core_end"], r["core_end"])
+        print(f"{g:>16s} {sp(cc):11.4f} {sp(ll):11.4f} "
+              f"{int(b['row_conflicts']):10d}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="soplex_like",
@@ -72,9 +99,15 @@ def main():
     ap.add_argument("--eight-core", action="store_true")
     ap.add_argument("--heat-grid", action="store_true",
                     help="capacity x duration sweep in one call")
+    ap.add_argument("--geo-grid", action="store_true",
+                    help="DRAM geometry x mechanism sweep in one call "
+                         "(implies --eight-core: channel/bank sensitivity "
+                         "needs multi-bank pressure)")
     ap.add_argument("--n-req", type=int, default=60_000)
     args = ap.parse_args()
 
+    if args.geo_grid:
+        args.eight_core = True
     if args.eight_core:
         mix = random_mixes(1, 8)[0]
         print(f"8-core mix: {mix}")
@@ -87,6 +120,9 @@ def main():
 
     if args.heat_grid:
         heat_grid(batch, policy)
+        return
+    if args.geo_grid:
+        geo_grid(batch, policy)
         return
 
     # all five mechanisms in one vmapped sweep (single compile)

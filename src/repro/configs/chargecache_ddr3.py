@@ -9,5 +9,6 @@ MECHANISMS = {
     "chargecache": MechanismConfig(kind="chargecache"),
     "nuat": MechanismConfig(kind="nuat"),
     "cc_nuat": MechanismConfig(kind="cc_nuat"),
+    "rltl": MechanismConfig(kind="rltl"),
     "lldram": MechanismConfig(kind="lldram"),
 }

@@ -6,7 +6,8 @@ The faithful reproduction of the thesis's mechanism (see DESIGN.md §2.1).
 from repro.core.timing import (TimingParams, TimingVec, DDR3_1600,
                                DDR3_1600_CC_1MS, lowered_for_duration,
                                ms_to_cycles, ns_to_cycles, CYCLE_NS)
-from repro.core.dram import DRAMConfig, DDR3_SYSTEM, NO_ROW
+from repro.core.dram import (DRAMConfig, DDR3_SYSTEM, DRAMEnvelope,
+                             GeomParams, NO_ROW, envelope_of, geom_params)
 from repro.core.hcrac import HCRACConfig, HCRACParams, HCRACState
 from repro.core.simulator import (MechanismConfig, MechParams, SimConfig,
                                   SimShape, mech_params, sim_shape, simulate,
@@ -17,7 +18,8 @@ from repro.core import charge_model, energy, rltl, traces
 __all__ = [
     "TimingParams", "TimingVec", "DDR3_1600", "DDR3_1600_CC_1MS",
     "lowered_for_duration", "ms_to_cycles", "ns_to_cycles", "CYCLE_NS",
-    "DRAMConfig", "DDR3_SYSTEM", "NO_ROW", "HCRACConfig", "HCRACParams",
+    "DRAMConfig", "DDR3_SYSTEM", "DRAMEnvelope", "GeomParams",
+    "envelope_of", "geom_params", "NO_ROW", "HCRACConfig", "HCRACParams",
     "HCRACState", "MechanismConfig", "MechParams", "SimConfig", "SimShape",
     "mech_params", "sim_shape", "simulate", "sweep", "sweep_traces",
     "weighted_speedup",

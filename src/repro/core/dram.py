@@ -4,21 +4,36 @@ Matches Table 5.1 of the thesis: DDR3-1600, 1-2 channels, 1 rank/channel,
 8 banks/rank, 64 K rows/bank, 8 KB row buffer.  Banks are indexed globally
 (``channel * banks_per_channel + bank``) throughout the simulator.
 
+Static envelope vs traced geometry (DESIGN.md §8): a concrete system is
+described by ``DRAMConfig`` (host-side, hashable).  For the batched
+experiment engine the configuration splits into
+
+* ``DRAMEnvelope`` — the *static* padded layout: the maximum channel /
+  global-bank / row counts across a grid.  It is the only geometry fact
+  that determines array shapes, so every geometry in a sweep shares one
+  XLA compilation.
+* ``GeomParams``  — the *traced* active counts (channels, ranks, banks,
+  rows, row-buffer bytes).  Channel-of / bank-of / row-id address mapping
+  is modular arithmetic over these traced values, so banks and channels
+  beyond the active counts are simply never addressed — the same
+  padded-prefix trick the HCRAC uses for capacity sweeps (DESIGN.md §4).
+
 Refresh is modelled as the standard rolling all-bank auto-refresh: every
 ``tREFI`` one of ``n_refresh_groups`` row groups is refreshed, so row ``r``
 of any bank is recharged at absolute cycles
 ``(r mod G) * tREFI + k * retention``.  This gives a *closed form* for
 time-since-last-refresh, which is what NUAT [Shin+ HPCA'14] keys on — no
-per-row refresh state is needed.
+per-row refresh state is needed.  The refresh-group arithmetic lives in
+``TimingParams``/``TimingVec`` (already traced), so it sweeps with the
+timing axis rather than the geometry axis.
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Iterable, NamedTuple
 
 import jax.numpy as jnp
-
-from repro.core.timing import TimingParams
 
 NO_ROW = jnp.int32(-1)
 
@@ -35,6 +50,10 @@ class DRAMConfig:
     def banks_total(self) -> int:
         return self.n_channels * self.n_ranks * self.n_banks
 
+    @property
+    def banks_per_channel(self) -> int:
+        return self.n_ranks * self.n_banks
+
     def channel_of(self, global_bank):
         return global_bank // (self.n_ranks * self.n_banks)
 
@@ -47,12 +66,102 @@ class DRAMConfig:
 DDR3_SYSTEM = DRAMConfig()
 
 
-def time_since_refresh(cfg: DRAMConfig, timing, row, t):
+@dataclasses.dataclass(frozen=True)
+class DRAMEnvelope:
+    """The static half of the geometry: the padded layout every grid point
+    shares.  Only ``max_channels`` / ``max_banks_total`` size arrays; the
+    row count rides along for memory-budget accounting and documentation.
+    Equal envelopes ⇒ one XLA compilation (DESIGN.md §8)."""
+    max_channels: int = 2
+    max_banks_total: int = 16
+    max_rows: int = 65536
+
+    def covers(self, cfg: DRAMConfig) -> bool:
+        return (self.max_channels >= cfg.n_channels
+                and self.max_banks_total >= cfg.banks_total
+                and self.max_rows >= cfg.n_rows)
+
+
+def envelope_of(cfgs: Iterable[DRAMConfig]) -> DRAMEnvelope:
+    """The smallest ``DRAMEnvelope`` covering every config in ``cfgs``."""
+    cfgs = list(cfgs)
+    assert cfgs, "envelope of an empty geometry set"
+    return DRAMEnvelope(
+        max_channels=max(c.n_channels for c in cfgs),
+        max_banks_total=max(c.banks_total for c in cfgs),
+        max_rows=max(c.n_rows for c in cfgs),
+    )
+
+
+class GeomParams(NamedTuple):
+    """Traced (vmappable) DRAM geometry: every leaf an int32 scalar array,
+    stacked along the grid axis by ``sweep()`` so 1-vs-2-channel and
+    bank-count sweeps ride one compilation.  Address mapping over these is
+    modular arithmetic: a trace's (bank, row) folds into the active
+    geometry as ``bank mod banks_total`` / ``row mod n_rows`` — identity
+    whenever the trace was generated for this geometry, and the
+    contention-preserving remap for geometry sensitivity studies."""
+    n_channels: jnp.ndarray
+    n_ranks: jnp.ndarray
+    n_banks: jnp.ndarray            # per rank
+    n_rows: jnp.ndarray             # per bank
+    banks_total: jnp.ndarray        # n_channels * n_ranks * n_banks
+    banks_per_channel: jnp.ndarray  # n_ranks * n_banks
+    row_buffer_bytes: jnp.ndarray
+
+
+def geom_params(cfg: DRAMConfig) -> GeomParams:
+    """The traced-params view of a concrete ``DRAMConfig``."""
+    return GeomParams(
+        n_channels=jnp.int32(cfg.n_channels),
+        n_ranks=jnp.int32(cfg.n_ranks),
+        n_banks=jnp.int32(cfg.n_banks),
+        n_rows=jnp.int32(cfg.n_rows),
+        banks_total=jnp.int32(cfg.banks_total),
+        banks_per_channel=jnp.int32(cfg.banks_per_channel),
+        row_buffer_bytes=jnp.int32(cfg.row_buffer_bytes),
+    )
+
+
+def channel_of(geom: GeomParams, global_bank):
+    """Channel owning a global bank id — data-driven (traced) division."""
+    return global_bank // geom.banks_per_channel
+
+
+def global_row_id(geom: GeomParams, global_bank, row):
+    """Unique id for (bank, row) — the HCRAC tag (thesis Eq. 6.2), over
+    the traced geometry."""
+    return global_bank * geom.n_rows + row
+
+
+def fold_address(geom: GeomParams, bank, row):
+    """Map a trace's (bank, row) into the active geometry.
+
+    Modular folding over the traced counts: for a trace generated against
+    this geometry the mapping is the identity (bitwise-neutral, verified
+    in tests/test_geometry.py); for a smaller active geometry the request
+    stream folds onto fewer banks/channels, preserving total traffic while
+    increasing contention — exactly the channel-sensitivity comparison of
+    the thesis (Table 5.1 variants).
+
+    Known approximation for *non-identity* folds: the closed-row policy's
+    queue-hit lookahead (``next_same``) is precomputed host-side over the
+    unfolded addresses, so the controller hint ignores cross-bank fold
+    collisions — a conservative hint, second-order next to the contention
+    shift itself (DESIGN.md §8; exact alternative: regenerate the trace
+    per geometry, the ROADMAP "geometry-aware workload generation" item).
+    """
+    return jnp.mod(bank, geom.banks_total), jnp.mod(row, geom.n_rows)
+
+
+def time_since_refresh(geom, timing, row, t):
     """Cycles since row ``row``'s group was last refreshed, at cycle ``t``.
 
     Closed form from the rolling-refresh schedule; always in
     ``[0, retention)``.  ``timing`` may be a static ``TimingParams`` or a
-    traced params pytree with the same field names (DESIGN.md §4).
+    traced params pytree with the same field names (DESIGN.md §4);
+    ``geom`` (a ``GeomParams`` or ``DRAMConfig``) rides along for API
+    symmetry — the refresh-group arithmetic is timing data.
     """
     groups = jnp.asarray(timing.n_refresh_groups, jnp.int32)
     phase = jnp.mod(row, groups) * jnp.asarray(timing.tREFI, jnp.int32)

@@ -28,11 +28,26 @@ class DDR3Power:
 
 
 def energy_nj(stats: dict, timing: TimingParams = DDR3_1600,
-              power: DDR3Power = DDR3Power(), n_channels: int = 2) -> dict:
-    """Total DRAM energy (nJ) from simulator stats."""
+              power: DDR3Power = DDR3Power(), geom=None,
+              n_channels: int | None = None) -> dict:
+    """Total DRAM energy (nJ) from simulator stats.
+
+    Geometry-aware device count: the rank population scaling comes from
+    ``geom`` (a ``DRAMConfig``/``GeomParams``) when given, else from the
+    active geometry the simulator recorded into ``stats`` (so a geometry
+    sweep's cells account their own channel/rank counts), else from the
+    Table 5.1 default.  ``n_channels`` remains as an explicit override.
+    """
     p = power
     cyc_s = CYCLE_NS * 1e-9
-    chips = p.devices_per_rank * n_channels
+    if n_channels is not None:
+        n_ch, n_rk = int(n_channels), 1
+    elif geom is not None:
+        n_ch, n_rk = int(geom.n_channels), int(geom.n_ranks)
+    else:
+        n_ch = int(stats.get("n_channels", 2))
+        n_rk = int(stats.get("n_ranks", 1))
+    chips = p.devices_per_rank * n_ch * n_rk
 
     # ACT+PRE pair energy: (IDD0 - IDD3N) over the tRAS window plus
     # (IDD0 - IDD2N) over tRP, per the DRAMPower formulation.

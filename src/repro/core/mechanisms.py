@@ -59,8 +59,11 @@ class SelectCtx(NamedTuple):
     Python-branch on it.
     """
     timing: TimingVec       # baseline timing set (traced)
+    geom: "GeomParams"      # traced DRAM geometry (repro.core.dram)
     hcrac_hit: jnp.ndarray  # bool: HCRAC hit at this ACT (gated)
     tsr: jnp.ndarray        # cycles since the row's last refresh at t_act
+    tslp: jnp.ndarray       # cycles since this row's last PRE, from the
+                            # per-bank last-PRE register (INF if unknown)
     needs_act: jnp.ndarray  # bool: this request activates (not a row hit)
 
 
@@ -309,6 +312,41 @@ class NUAT(MechanismPolicy):
             n_ras = jnp.where(inbin, block["ras"][i], n_ras)
         rcd = jnp.where(block["enable"], jnp.minimum(rcd, n_rcd), rcd)
         ras = jnp.where(block["enable"], jnp.minimum(ras, n_ras), ras)
+        return rcd, ras
+
+
+@register_mechanism("rltl")
+class RLTL(MechanismPolicy):
+    """Direct row-level-temporal-locality exploitation (arXiv:1805.03969).
+
+    The HPCA'16 paper's underlying observation, turned into the cheapest
+    hardware embodiment: one *last-precharged-row register* per bank
+    (tag + timestamp, no SRAM table).  An ACT whose row matches its bank's
+    register within the charge window uses the lowered timings — exact
+    for the dominant RLTL source (conflict ping-pong re-activating a row
+    right after its own PRE), a miss whenever ≥ 2 other rows precharged
+    in the bank since.  Versus ChargeCache this trades the shared HCRAC's
+    reach for per-bank O(1) storage; the gap between the two is the value
+    of the table.  The signal arrives as ``ctx.tslp`` (the simulator's
+    per-bank last-PRE registers); the window and lowered timings reuse
+    the ChargeCache knobs (``hcrac.caching_cycles`` is the same physical
+    quantity — how long a precharged row stays highly charged).
+    """
+    consumes = ("hcrac", "lowered")
+
+    def block(self, mech, timing, enabled, hints):
+        low = timing if mech is None else mech.lowered
+        window = (timing.tREFI if mech is None
+                  else mech.hcrac.caching_cycles)
+        return {"enable": jnp.bool_(enabled),
+                "window": jnp.int32(window),
+                "tRCD": jnp.int32(low.tRCD),
+                "tRAS": jnp.int32(low.tRAS)}
+
+    def select(self, block, ctx, rcd, ras):
+        hit = block["enable"] & ctx.needs_act & (ctx.tslp < block["window"])
+        rcd = jnp.where(hit, jnp.minimum(rcd, block["tRCD"]), rcd)
+        ras = jnp.where(hit, jnp.minimum(ras, block["tRAS"]), ras)
         return rcd, ras
 
 

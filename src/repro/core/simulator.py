@@ -20,11 +20,14 @@ One ``lax.scan`` step = one memory request, end to end:
 Stats (hit rates, RLTL histograms, latency, per-core end times, energy
 counters) accumulate in-scan with warm-up masking.
 
-**Batched experiment engine** (DESIGN.md §4): a configuration is split
-into a static *shape* (``SimShape`` — array sizes, HCRAC geometry, MSHR
-depth) and a traced *params* pytree (``MechParams`` — every timing value,
-HCRAC capacity/duration, one gated param block per registered mechanism
-policy).  The scan body takes params as data and delegates timing
+**Batched experiment engine** (DESIGN.md §4, §8): a configuration is
+split into a static *shape* (``SimShape`` — the padded DRAM envelope,
+HCRAC array sizes, MSHR depth) and a traced *params* pytree
+(``MechParams`` — every timing value, the active DRAM geometry
+(``GeomParams``), HCRAC capacity/duration, one gated param block per
+registered mechanism policy).  The scan body takes params as data,
+folds trace addresses into the active geometry by modular arithmetic
+(``dram.fold_address``), and delegates timing
 selection to the mechanism registry (``repro.experiment.registry``), so
 mechanism choice is a fold of data-driven policies rather than Python
 branching, one compiled program serves every registered mechanism kind,
@@ -49,8 +52,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hcrac as hcrac_lib
-from repro.core.dram import (DRAMConfig, DDR3_SYSTEM, NO_ROW, refresh_adjust,
-                             time_since_refresh)
+from repro.core import dram as dram_lib
+from repro.core.dram import (DRAMConfig, DDR3_SYSTEM, DRAMEnvelope,
+                             GeomParams, NO_ROW, envelope_of, fold_address,
+                             geom_params, refresh_adjust, time_since_refresh)
 from repro.core import timing as timing_lib
 from repro.core.timing import (TimingParams, TimingVec, DDR3_1600,
                                ms_to_cycles)
@@ -105,8 +110,9 @@ class SimShape:
     """The static half of a configuration: everything that determines array
     shapes or trace structure.  Two configs with equal ``SimShape`` (and
     equal trace/step shapes) share one XLA compilation; all remaining
-    knobs live in ``MechParams`` and are traced."""
-    dram: DRAMConfig
+    knobs — including the *active* DRAM geometry — live in ``MechParams``
+    and are traced."""
+    envelope: DRAMEnvelope        # padded geometry layout (DESIGN.md §8)
     hcrac: hcrac_lib.HCRACConfig  # shape carrier: max sets / ways / expiry
     mshr: int
 
@@ -118,17 +124,22 @@ class MechParams(NamedTuple):
     ``sweep()`` stacks these along a leading grid axis and ``vmap``s the
     simulator over it."""
     timing: TimingVec            # full DDR3 timing set, traced
+    geom: GeomParams             # active DRAM geometry, traced
     closed_policy: jnp.ndarray   # bool: closed-row policy (auto-precharge)
     hcrac: hcrac_lib.HCRACParams
     mech: dict                   # registry blocks: {policy: {leaf: array}}
 
 
-def sim_shape(cfg: SimConfig, n_sets_max: int | None = None) -> SimShape:
+def sim_shape(cfg: SimConfig, n_sets_max: int | None = None,
+              envelope: DRAMEnvelope | None = None) -> SimShape:
     """The static shape of ``cfg``; ``n_sets_max`` pads the HCRAC arrays
-    so a whole grid shares one shape."""
+    and ``envelope`` pads the DRAM geometry so a whole grid shares one
+    shape."""
     h = cfg.mech.hcrac
+    env = envelope if envelope is not None else envelope_of([cfg.dram])
+    assert env.covers(cfg.dram), (env, cfg.dram)
     return SimShape(
-        dram=cfg.dram,
+        envelope=env,
         hcrac=hcrac_lib.padded_shape(h, n_sets_max or h.n_sets),
         mshr=cfg.mshr,
     )
@@ -144,6 +155,7 @@ def mech_params(cfg: SimConfig, hints: dict | None = None) -> MechParams:
     """
     return MechParams(
         timing=timing_lib.traced(cfg.timing),
+        geom=geom_params(cfg.dram),
         closed_policy=jnp.bool_(cfg.policy == "closed"),
         hcrac=hcrac_lib.params_of(cfg.mech.hcrac),
         mech=registry.build_blocks(cfg.mech, cfg.timing, hints),
@@ -158,11 +170,14 @@ class SimState(NamedTuple):
     mshr_ring: jnp.ndarray     # [C, MSHR] completion times
     ring_idx: jnp.ndarray      # [C]
     core_end: jnp.ndarray      # [C] completion of last request so far
-    # per-bank state
+    # per-bank state (NB = the padded envelope's max_banks_total; banks
+    # beyond the traced active count are never addressed)
     open_row: jnp.ndarray      # [NB]
     ready_act: jnp.ndarray     # [NB]
     ready_rdwr: jnp.ndarray    # [NB]
     ready_pre: jnp.ndarray     # [NB]
+    last_pre_gid: jnp.ndarray  # [NB] row id of the bank's latest PRE
+    last_pre_t: jnp.ndarray    # [NB] cycle of that PRE (RLTL registers)
     # per-channel buses
     cmd_bus_free: jnp.ndarray  # [NCH]
     data_bus_free: jnp.ndarray  # [NCH]
@@ -197,8 +212,8 @@ class Events(NamedTuple):
 
 
 def _init_state(shape: SimShape, n_cores: int, max_len: int) -> SimState:
-    nb = shape.dram.banks_total
-    nch = shape.dram.n_channels
+    nb = shape.envelope.max_banks_total
+    nch = shape.envelope.max_channels
     z = lambda *s: jnp.zeros(s, jnp.int32)
     stats = {k: jnp.int32(0) for k in STAT_KEYS}
     return SimState(
@@ -207,6 +222,7 @@ def _init_state(shape: SimShape, n_cores: int, max_len: int) -> SimState:
         core_end=z(n_cores),
         open_row=jnp.full((nb,), NO_ROW, jnp.int32),
         ready_act=z(nb), ready_rdwr=z(nb), ready_pre=z(nb),
+        last_pre_gid=jnp.full((nb,), -1, jnp.int32), last_pre_t=z(nb),
         cmd_bus_free=z(nch), data_bus_free=z(nch),
         hcrac=hcrac_lib.init(shape.hcrac),
         stats=stats,
@@ -226,9 +242,9 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
     caller and their events are masked out below.
     """
     T = p.timing
-    dram = shape.dram
+    geom = p.geom
     hshape = shape.hcrac
-    ch = dram.channel_of(bank)
+    ch = dram_lib.channel_of(geom, bank)
     stats = dict(st.stats)
 
     t0 = jnp.maximum(t_arr, st.cmd_bus_free[ch])
@@ -243,7 +259,8 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
 
     # --- conflict path: PRE the open row (insert it into the HCRAC) ------
     t_pre = refresh_adjust(T, jnp.maximum(t0, st.ready_pre[bank]))
-    gid_old = dram.global_row_id(bank, jnp.where(is_conflict, openr, 0))
+    gid_old = dram_lib.global_row_id(geom, bank,
+                                     jnp.where(is_conflict, openr, 0))
     hc = hcrac_lib.insert(hshape, st.hcrac, gid_old, t_pre,
                           enable=is_conflict & hc_gate & enable,
                           params=p.hcrac)
@@ -255,19 +272,25 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
         refresh_adjust(T, jnp.maximum(t0, st.ready_act[bank])))
     needs_act = ~is_hit
 
-    gid = dram.global_row_id(bank, row)
+    gid = dram_lib.global_row_id(geom, bank, row)
     cc_hit, hc = hcrac_lib.lookup(hshape, hc, gid, t_act, enable=enable,
                                   params=p.hcrac)
     cc_hit = cc_hit & needs_act & hc_gate
+
+    # per-bank last-PRE registers: cycles since this row's own latest PRE,
+    # exact when it was the bank's most recent PRE (the RLTL mechanism's
+    # signal; per-bank t_act monotonicity keeps the difference >= 0).
+    tslp = jnp.where(st.last_pre_gid[bank] == gid,
+                     t_act - st.last_pre_t[bank], INF)
 
     # mechanism timing selection: fold the registered policies over the
     # baseline timings, in registration order (LL-DRAM base, then
     # ChargeCache hit override, then NUAT minimum — DESIGN.md §7.2).
     # Selection stays data-driven: each policy gates on its own traced
     # ``enable`` leaf, so one compiled body serves every registered kind.
-    tsr = time_since_refresh(dram, T, row, t_act)
-    ctx = registry.SelectCtx(timing=T, hcrac_hit=cc_hit, tsr=tsr,
-                             needs_act=needs_act)
+    tsr = time_since_refresh(geom, T, row, t_act)
+    ctx = registry.SelectCtx(timing=T, geom=geom, hcrac_hit=cc_hit, tsr=tsr,
+                             tslp=tslp, needs_act=needs_act)
     rcd, ras = registry.select_timings(p.mech, ctx)
     lowered_used = needs_act & ((rcd < T.tRCD) | (ras < T.tRAS))
 
@@ -302,6 +325,14 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
               + auto_pre.astype(jnp.int32))
     new_cmd_free = jnp.maximum(st.cmd_bus_free[ch], t_arr) + n_cmds
     new_data_free = done
+
+    # last-PRE registers: the auto-PRE (if any) postdates the conflict-PRE
+    new_lp_gid = jnp.where(auto_pre, gid,
+                           jnp.where(is_conflict, gid_old,
+                                     st.last_pre_gid[bank]))
+    new_lp_t = jnp.where(auto_pre, t_autopre,
+                         jnp.where(is_conflict, t_pre,
+                                   st.last_pre_t[bank]))
 
     # --- stats ---------------------------------------------------------------
     m = measure.astype(jnp.int32)
@@ -346,6 +377,10 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
             w(new_ready_rdwr, st.ready_rdwr[bank])),
         ready_pre=st.ready_pre.at[bank].set(
             w(new_ready_pre, st.ready_pre[bank])),
+        last_pre_gid=st.last_pre_gid.at[bank].set(
+            w(new_lp_gid, st.last_pre_gid[bank])),
+        last_pre_t=st.last_pre_t.at[bank].set(
+            w(new_lp_t, st.last_pre_t[bank])),
         cmd_bus_free=st.cmd_bus_free.at[ch].set(
             w(new_cmd_free, st.cmd_bus_free[ch])),
         data_bus_free=st.data_bus_free.at[ch].set(
@@ -385,8 +420,12 @@ def _make_step(shape: SimShape, p: MechParams, trace: dict, warmup_steps,
         # discarded below and its events are masked out.
         alive = t_arr < INF
         measure = (step_idx >= warmup_steps) & alive
-        st2, done, events = _service(shape, p, st, t_arr, bank[c, ptr_c[c]],
-                                     row[c, ptr_c[c]], is_write[c, ptr_c[c]],
+        # data-driven address mapping: fold the trace's (bank, row) into
+        # the active geometry (identity for a trace generated against it)
+        b_act, r_act = fold_address(p.geom, bank[c, ptr_c[c]],
+                                    row[c, ptr_c[c]])
+        st2, done, events = _service(shape, p, st, t_arr, b_act,
+                                     r_act, is_write[c, ptr_c[c]],
                                      next_same[c, ptr_c[c]], measure, alive)
 
         # 2. core bookkeeping (masked: a dead step must not advance cores)
@@ -516,7 +555,7 @@ def _device_trace(batch: TraceBatch) -> dict:
 
 
 def _finalize(raw_stats: dict, core_end, events: Events | None,
-              batch: TraceBatch) -> dict:
+              batch: TraceBatch, cfg: SimConfig | None = None) -> dict:
     """Host-side post-processing shared by ``simulate`` and ``sweep``."""
     stats = {k: np.asarray(v) for k, v in raw_stats.items()}
     if events is not None:
@@ -529,6 +568,13 @@ def _finalize(raw_stats: dict, core_end, events: Events | None,
     stats["total_cycles"] = int(stats["core_end"].max())
     stats["n_cores"] = int(batch.length.shape[0])
     stats["lengths"] = np.asarray(batch.length)
+    if cfg is not None:
+        # active geometry of this point (geometry-aware consumers:
+        # energy_nj, the geometry benchmark's labels)
+        stats["n_channels"] = cfg.dram.n_channels
+        stats["n_ranks"] = cfg.dram.n_ranks
+        stats["n_banks"] = cfg.dram.n_banks
+        stats["banks_total"] = cfg.dram.banks_total
     s = stats
     s["avg_latency"] = float(s["lat_sum"]) / max(int(s["n_req"]), 1)
     s["hcrac_hit_rate"] = (float(s["hcrac_hits"]) /
@@ -554,7 +600,7 @@ def simulate(batch: TraceBatch, cfg: SimConfig = SimConfig()) -> dict:
     warmup = jnp.int32(int(cfg.warmup_frac * n_steps))
     raw_stats, core_end, events = _run(sim_shape(cfg), mech_params(cfg),
                                        trace, warmup, n_steps)
-    return _finalize(raw_stats, core_end, events, batch)
+    return _finalize(raw_stats, core_end, events, batch, cfg)
 
 
 def _shard_grid(stacked: MechParams, n_grid: int):
@@ -587,15 +633,15 @@ def _grid_shape_and_params(grid: Sequence[SimConfig],
     and the stacked traced params.
 
     ``shape_grid`` (a superset of ``grid``, defaulting to ``grid``) is
-    what determines the padded HCRAC capacity and the registry pad hints:
-    the experiment runner passes the *full* grid here while launching a
-    chunk, so every chunk shares one ``SimShape`` — and therefore one
-    compilation.  Extra padding is behaviour-neutral (DESIGN.md §4).
+    what determines the padded DRAM envelope, the padded HCRAC capacity,
+    and the registry pad hints: the experiment runner passes the *full*
+    grid here while launching a chunk, so every chunk shares one
+    ``SimShape`` — and therefore one compilation.  Extra padding is
+    behaviour-neutral (DESIGN.md §4, §8).
     """
     shape_grid = list(shape_grid) if shape_grid is not None else list(grid)
     c0 = grid[0]
     for cfg in list(grid) + shape_grid:
-        assert cfg.dram == c0.dram, "sweep grid must share DRAM geometry"
         assert cfg.mshr == c0.mshr, "sweep grid must share MSHR depth"
         assert cfg.warmup_frac == c0.warmup_frac
         assert cfg.mech.hcrac.n_ways == c0.mech.hcrac.n_ways
@@ -603,8 +649,9 @@ def _grid_shape_and_params(grid: Sequence[SimConfig],
     n_sets_max = max(cfg.mech.hcrac.n_sets for cfg in shape_grid)
     assert n_sets_max >= max(cfg.mech.hcrac.n_sets for cfg in grid), \
         "shape_grid must cover every launched config's HCRAC capacity"
+    env = envelope_of([cfg.dram for cfg in list(grid) + shape_grid])
     hints = registry.pad_hints([cfg.mech for cfg in shape_grid])
-    shape = sim_shape(c0, n_sets_max=n_sets_max)
+    shape = sim_shape(c0, n_sets_max=n_sets_max, envelope=env)
     stacked = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs),
         *[mech_params(cfg, hints=hints) for cfg in grid])
@@ -616,11 +663,13 @@ def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
           shape_grid: Sequence[SimConfig] | None = None) -> list[dict]:
     """Evaluate every configuration in ``grid`` on ``batch`` in one call.
 
-    The whole grid — any mix of the five mechanism kinds, HCRAC
-    capacities, caching durations, timing sets — is flattened to stacked
-    ``MechParams`` and evaluated by one ``vmap``-ed, jit-compiled scan
-    (sharded across devices when several are available).  Results are
-    bitwise identical to per-config ``simulate()`` calls.
+    The whole grid — any mix of the registered mechanism kinds, HCRAC
+    capacities, caching durations, timing sets, and DRAM geometries
+    (channel/bank counts pad to a shared envelope, DESIGN.md §8) — is
+    flattened to stacked ``MechParams`` and evaluated by one ``vmap``-ed,
+    jit-compiled scan (sharded across devices when several are
+    available).  Results are bitwise identical to per-config
+    ``simulate()`` calls.
 
     ``pad_steps=True`` pads the scan length to the trace *capacity*
     (cores x padded length) instead of the exact request count; padded
@@ -656,7 +705,7 @@ def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
     return [
         _finalize({k: v[g] for k, v in stats_np.items()}, core_np[g],
                   Events(*(e[g] for e in events_np))
-                  if events_np is not None else None, batch)
+                  if events_np is not None else None, batch, grid[g])
         for g in range(n_grid)
     ]
 
@@ -713,7 +762,7 @@ def sweep_traces(batches: Sequence[TraceBatch], grid: Sequence[SimConfig],
             ev = (Events(*(e[b, g] for e in events_np))
                   if events_np is not None else None)
             row.append(_finalize({k: v[b, g] for k, v in stats_np.items()},
-                                 core_np[b, g], ev, batches[b]))
+                                 core_np[b, g], ev, batches[b], grid[g]))
         out.append(row)
     return out
 

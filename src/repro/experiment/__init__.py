@@ -26,6 +26,7 @@ _LAZY = {
     "Experiment": "spec",
     "register_axis": "spec",
     "AXIS_BUILDERS": "spec",
+    "GEOMETRY_PRESETS": "spec",
     "Results": "results",
     "run_experiment": "runner",
 }

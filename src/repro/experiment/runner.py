@@ -65,17 +65,24 @@ def _dedup(configs: list[SimConfig], enable: bool):
 
 def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
                     n_cores: int, mshr: int, n_traces: int,
-                    rltl: bool) -> int:
+                    rltl: bool, n_banks_total: int = 16,
+                    n_channels: int = 2) -> int:
     """Rough per-grid-point device-memory estimate for one launch.
 
     Dominant terms: the per-point HCRAC state (three int32 arrays, double
-    counted for the scan's in/out carry) and — when events are collected
-    for RLTL — the per-step event stream (7 int32 scan outputs).  The
-    trace itself is shared across the grid axis and excluded.  With
-    ``sweep_traces`` the whole thing multiplies by the batch axis.
+    counted for the scan's in/out carry), the per-bank/per-channel carry
+    sized by the padded geometry *envelope* (six int32 bank arrays —
+    open-row, three ready times, the two last-PRE registers — plus two
+    bus arrays; a 1024-bank envelope point carries ~50 KB where the old
+    constant assumed Table 5.1's 16 banks) and — when events are
+    collected for RLTL — the per-step event stream (7 int32 scan
+    outputs).  The trace itself is shared across the grid axis and
+    excluded.  With ``sweep_traces`` the whole thing multiplies by the
+    batch axis.
     """
     per = 4096  # carry scalars, stats, issue-model state, slack
     per += n_sets_max * n_ways * 3 * 4 * 2
+    per += (6 * n_banks_total + 2 * n_channels) * 4 * 2
     per += n_cores * (mshr + 8) * 4
     if rltl:
         per += 7 * 4 * n_steps
@@ -89,6 +96,9 @@ def _auto_chunk(unique: list[SimConfig], groups, rltl: bool,
                                       DEFAULT_BUDGET_MB)))
     n_sets_max = max(c.mech.hcrac.n_sets for c in unique)
     n_ways = unique[0].mech.hcrac.n_ways
+    # the carry is sized by the padded geometry envelope of the grid
+    n_banks_max = max(c.dram.banks_total for c in unique)
+    n_ch_max = max(c.dram.n_channels for c in unique)
     worst = 1
     for batches in groups.values():
         n_cores, max_len = batches[0][1].gap.shape[0], max(
@@ -96,7 +106,8 @@ def _auto_chunk(unique: list[SimConfig], groups, rltl: bool,
         worst = max(worst, bytes_per_point(
             n_steps=n_cores * max_len, n_sets_max=n_sets_max,
             n_ways=n_ways, n_cores=n_cores, mshr=unique[0].mshr,
-            n_traces=len(batches), rltl=rltl))
+            n_traces=len(batches), rltl=rltl,
+            n_banks_total=n_banks_max, n_channels=n_ch_max))
     ndev = max(1, len(jax.devices()))
     budget = budget_mb * 2**20 * ndev
     chunk = int(max(1, budget // worst))

@@ -24,11 +24,24 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Mapping, Sequence
 
+from repro.core.dram import DRAMConfig
 from repro.core.simulator import SimConfig
 from repro.core.timing import lowered_for_duration, ms_to_cycles
 from repro.experiment.results import DEFAULT_METRICS, Results
 
 AXIS_BUILDERS: dict[str, Callable[[SimConfig, Any], SimConfig]] = {}
+
+#: Named DRAM geometries for the ``geometry`` axis — Table 5.1's
+#: channel-sensitivity variants plus bank-count studies.  All pad into
+#: one ``DRAMEnvelope`` inside a sweep, so a geometry axis rides the
+#: same single compilation as every other axis (DESIGN.md §8).
+GEOMETRY_PRESETS: dict[str, DRAMConfig] = {
+    "ddr3_1ch": DRAMConfig(n_channels=1),
+    "ddr3_2ch": DRAMConfig(n_channels=2),
+    "ddr3_1ch_4bank": DRAMConfig(n_channels=1, n_banks=4),
+    "ddr3_1ch_16bank": DRAMConfig(n_channels=1, n_banks=16),
+    "ddr3_2ch_16bank": DRAMConfig(n_channels=2, n_banks=16),
+}
 
 
 def register_axis(name: str):
@@ -61,6 +74,23 @@ def _axis_duration(cfg: SimConfig, ms: float) -> SimConfig:
     mech = dataclasses.replace(cfg.mech, hcrac=hcrac,
                                lowered=lowered_for_duration(ms))
     return dataclasses.replace(cfg, mech=mech)
+
+
+@register_axis("geometry")
+def _axis_geometry(cfg: SimConfig, geom) -> SimConfig:
+    """DRAM geometry: a ``GEOMETRY_PRESETS`` name or a ``DRAMConfig``.
+
+    Traced end to end (``GeomParams``), so a channel/bank sweep shares
+    one compilation; trace addresses fold into each active geometry by
+    modular arithmetic (``repro.core.dram.fold_address``).
+    """
+    if isinstance(geom, str):
+        assert geom in GEOMETRY_PRESETS, (
+            f"unknown geometry preset {geom!r}; "
+            f"known: {tuple(GEOMETRY_PRESETS)}")
+        geom = GEOMETRY_PRESETS[geom]
+    assert isinstance(geom, DRAMConfig), geom
+    return dataclasses.replace(cfg, dram=geom)
 
 
 @register_axis("policy")

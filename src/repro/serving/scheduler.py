@@ -55,9 +55,22 @@ class Scheduler:
         self.trace_pages: list[int] = []
         self.trace_times: list[int] = []
         self.stats = {"steps": 0, "hot_hits": 0, "probes": 0,
-                      "retired": 0}
+                      "retired": 0, "admit_probes": 0, "admit_hot": 0}
 
     def submit(self, req: Request):
+        """Queue a request; its prompt prefill touches its KV pages.
+
+        Prefill writes the prompt's KV pages through the row buffers, so
+        a queued-but-never-run request still has recently-charged pages —
+        decaying with queue age.  Without this, queued requests score 0
+        in the hot-page probe and charge-aware admission degenerates to
+        FIFO (ROADMAP "serving realism"); with it, admission order
+        discriminates by page charge (tests/test_substrate.py).
+        """
+        pages = self._page_ids(req)
+        self.tracker.touch(pages, self.now)
+        self.trace_pages.extend(pages.tolist())
+        self.trace_times.extend([self.now] * len(pages))
         self.queue.append(req)
 
     def _page_ids(self, req: Request) -> np.ndarray:
@@ -89,6 +102,16 @@ class Scheduler:
     def step(self):
         """One decode step for the active batch."""
         self._admit()
+        # admission hot rate: how charged are a request's pages at its
+        # FIRST decode step?  Measured identically under both policies —
+        # the metric the policy study compares (charge-aware admission
+        # should pick requests whose prefill charge hasn't decayed).
+        for r in self.active:
+            if r.done_tokens == 0:
+                pages = self._page_ids(r)
+                hits = self.tracker.probe(pages, self.now)
+                self.stats["admit_probes"] += len(pages)
+                self.stats["admit_hot"] += int(hits.sum())
         accessed = []
         for r in self.active:
             pages = self._page_ids(r)

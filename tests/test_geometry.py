@@ -1,0 +1,178 @@
+"""Traced DRAM geometry (DESIGN.md §8): padded-envelope parity, the
+``geometry`` experiment axis, and chunked geometry grids.
+
+Contracts:
+
+* A run under a padded ``DRAMEnvelope`` is *bitwise* identical to the
+  exact-shape run — banks/channels beyond the traced active counts are
+  never addressed (modular address mapping), for every registered
+  mechanism.
+* A geometry × mechanism × trace matrix through ``Experiment`` costs
+  exactly one XLA compilation, and every cell equals a per-config
+  ``simulate()`` with the exact (unpadded) geometry.
+* Chunked geometry grids and the ``Results`` round-trip (including the
+  geometry axis labels) are behaviour-neutral.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (DRAMConfig, MechanismConfig, SimConfig, envelope_of,
+                        simulate, sweep)
+from repro.core import simulator as sim_mod
+from repro.core.dram import DRAMEnvelope
+from repro.core.traces import single_core_batch
+from repro.experiment import (Experiment, GEOMETRY_PRESETS, Results,
+                              registry)
+
+N = 1500
+
+BITWISE_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
+                "hcrac_lookups", "row_hits", "row_closed", "row_conflicts",
+                "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts",
+                "total_cycles")
+
+GEOM_SMALL = DRAMConfig(n_channels=1)
+GEOM_BIG = DRAMConfig(n_channels=2, n_banks=16)
+
+
+def _assert_cell_matches(ref: dict, got: dict):
+    for k in BITWISE_KEYS:
+        assert int(ref[k]) == int(got[k]), k
+    assert np.array_equal(ref["core_end"], got["core_end"])
+
+
+def test_envelope_covers_and_orders():
+    env = envelope_of([GEOM_SMALL, GEOM_BIG])
+    assert env == DRAMEnvelope(max_channels=2, max_banks_total=32,
+                               max_rows=65536)
+    assert env.covers(GEOM_SMALL) and env.covers(GEOM_BIG)
+    assert not envelope_of([GEOM_SMALL]).covers(GEOM_BIG)
+
+
+def test_padded_geometry_parity_every_mechanism():
+    """A mixed-geometry sweep (padded to the 32-bank envelope) must be
+    bitwise-identical to exact-shape simulate() for EVERY registered
+    mechanism kind."""
+    batch = single_core_batch("milc_like", N, seed=5)
+    kinds = registry.names()
+    assert len(kinds) >= 6  # base/cc/nuat/cc_nuat/rltl/lldram at least
+    grid = [SimConfig(dram=g, mech=MechanismConfig(kind=k))
+            for g in (GEOM_SMALL, GEOM_BIG) for k in kinds]
+    swept = sweep(batch, grid)
+    for cfg, got in zip(grid, swept):
+        ref = simulate(batch, cfg)  # exact (unpadded) envelope
+        _assert_cell_matches(ref, got)
+        assert np.array_equal(ref["rltl_hist"], got["rltl_hist"])
+        assert got["n_channels"] == cfg.dram.n_channels
+        assert got["banks_total"] == cfg.dram.banks_total
+
+
+def test_geometry_folding_increases_contention():
+    """The same trace folded onto fewer banks/channels must see at least
+    as many row conflicts and run at least as long (the physical effect
+    the channel-sensitivity study measures)."""
+    batch = single_core_batch("mcf_like", N, seed=3)
+    one, two = sweep(batch, [
+        SimConfig(dram=GEOM_SMALL, mech=MechanismConfig(kind="base")),
+        SimConfig(dram=DRAMConfig(n_channels=2),
+                  mech=MechanismConfig(kind="base")),
+    ])
+    assert int(one["row_conflicts"]) >= int(two["row_conflicts"])
+    assert int(one["total_cycles"]) >= int(two["total_cycles"])
+
+
+def test_experiment_geometry_mech_grid_one_compile_bitwise():
+    """ACCEPTANCE: a geometry × mechanism grid (≥2 geometries × ≥3
+    mechanisms × 2 traces) runs through Experiment with exactly one XLA
+    compile, every cell bitwise-identical to exact-shape simulate()."""
+    traces = {"milc_like": single_core_batch("milc_like", 1400, seed=9),
+              "lbm_like": single_core_batch("lbm_like", 1400, seed=9)}
+    geoms = ["ddr3_1ch", "ddr3_2ch"]
+    mechs = ["base", "chargecache", "rltl"]
+    exp = Experiment(traces=traces, trace_dim="workload",
+                     axes={"geometry": geoms, "mechanism": mechs})
+    before = sim_mod._run_grid._cache_size()
+    res = exp.run()
+    assert sim_mod._run_grid._cache_size() - before == 1, \
+        "geometry sweeps must ride one compilation"
+    assert res.dims == ("workload", "geometry", "mechanism")
+    assert res.coords["geometry"] == tuple(geoms)
+
+    for w, batch in traces.items():
+        for g in geoms:
+            for m in mechs:
+                ref = simulate(batch, SimConfig(
+                    dram=GEOMETRY_PRESETS[g],
+                    mech=MechanismConfig(kind=m)))
+                _assert_cell_matches(
+                    ref, res.point(workload=w, geometry=g, mechanism=m))
+
+
+def test_geometry_grid_chunked_parity():
+    """Chunked geometry grids share one compile and stay bitwise-equal
+    to the unchunked run (the envelope comes from the full shape_grid)."""
+    batch = single_core_batch("soplex_like", 1300, seed=7)
+    axes = {"geometry": ["ddr3_1ch", "ddr3_2ch", "ddr3_1ch_4bank"],
+            "mechanism": ["base", "chargecache"]}
+    before = sim_mod._run_batched._cache_size()
+    small = Experiment(traces=batch, axes=axes, chunk_size=2).run()
+    compiles = sim_mod._run_batched._cache_size() - before
+    whole = Experiment(traces=batch, axes=axes).run()
+    assert small.meta["n_chunks"] >= 2 and whole.meta["n_chunks"] == 1
+    assert compiles == 1
+    for a, b in zip(small.cells.flat, whole.cells.flat):
+        _assert_cell_matches(a, b)
+
+
+def test_results_roundtrip_with_geometry_axis():
+    batch = single_core_batch("gcc_like", 900, seed=4)
+    res = Experiment(traces=batch,
+                     axes={"geometry": ["ddr3_1ch", "ddr3_2ch"],
+                           "mechanism": ["base", "chargecache"]}).run()
+    back = Results.from_json(res.to_json())
+    assert back.dims == res.dims
+    assert back.coords["geometry"] == ("ddr3_1ch", "ddr3_2ch")
+    for a, b in zip(res.cells.flat, back.cells.flat):
+        for k in BITWISE_KEYS:
+            assert int(a[k]) == int(b[k]), k
+        assert a["n_channels"] == b["n_channels"]
+        assert a["banks_total"] == b["banks_total"]
+
+
+def test_geometry_aware_energy_accounting():
+    """energy_nj picks up the active geometry recorded in the stats, so a
+    1-channel system accounts half the devices of the 2-channel one."""
+    from repro.core.energy import energy_nj
+    batch = single_core_batch("lbm_like", 900, seed=2)
+    one, two = sweep(batch, [
+        SimConfig(dram=GEOM_SMALL, mech=MechanismConfig(kind="base")),
+        SimConfig(dram=DRAMConfig(n_channels=2),
+                  mech=MechanismConfig(kind="base")),
+    ])
+    e1, e2 = energy_nj(one), energy_nj(two)
+    # per-chip energy scales with the chip count: explicitly overriding
+    # the channel count must reproduce the stats-derived accounting
+    assert e1["total"] == pytest.approx(
+        energy_nj(one, n_channels=1)["total"])
+    assert e2["total"] == pytest.approx(
+        energy_nj(two, n_channels=2)["total"])
+    assert e2["ref"] > e1["ref"]  # 2x devices refresh more
+
+
+def test_geometry_aware_bytes_per_point():
+    """Auto-chunk budgeting must grow with the geometry envelope."""
+    from repro.experiment.runner import bytes_per_point
+    small = bytes_per_point(n_steps=1000, n_sets_max=64, n_ways=2,
+                            n_cores=1, mshr=8, n_traces=1, rltl=False,
+                            n_banks_total=16, n_channels=2)
+    big = bytes_per_point(n_steps=1000, n_sets_max=64, n_ways=2,
+                          n_cores=1, mshr=8, n_traces=1, rltl=False,
+                          n_banks_total=1024, n_channels=64)
+    assert big > small + 6 * (1024 - 16) * 4  # carry in/out both counted
+
+
+def test_unknown_geometry_preset_rejected():
+    batch = single_core_batch("gcc_like", 300, seed=1)
+    with pytest.raises(AssertionError):
+        Experiment(traces=batch, axes={"geometry": ["ddr9_bogus"]}).expand()

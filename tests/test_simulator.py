@@ -90,6 +90,31 @@ def test_conflict_trace_has_full_rltl():
     assert s2["hcrac_hit_rate"] > 0.95
 
 
+def test_rltl_mechanism_ordering():
+    """RLTL (per-bank last-PRE registers, arXiv:1805.03969) lowers a
+    subset of LL-DRAM's ACTs: base >= rltl >= lldram in cycles."""
+    batch = single_core_batch("milc_like", N, seed=5)
+    base = _stats("base", batch=batch)
+    r = _stats("rltl", batch=batch)
+    ll = _stats("lldram", batch=batch)
+    assert ll["total_cycles"] <= r["total_cycles"] <= base["total_cycles"]
+    assert 0.0 < r["acts_lowered_frac"] <= 1.0
+    # no HCRAC involved: the registers are not the table
+    assert r["hcrac_lookups"] == 0
+
+
+def test_rltl_captures_conflict_ping_pong():
+    """Two rows ping-ponging in one bank re-activate right after their
+    own PRE — the bank's last-PRE register catches nearly every ACT."""
+    gap = np.full(4000, 20, np.int32)
+    tr = Trace(gap=gap, bank=np.zeros(4000, np.int32),
+               row=np.arange(4000, dtype=np.int32) % 2,
+               is_write=np.zeros(4000, bool), dep=np.zeros(4000, bool))
+    s = simulate(batch_traces([tr]),
+                 SimConfig(mech=MechanismConfig(kind="rltl")))
+    assert s["acts_lowered_frac"] > 0.95
+
+
 def test_multicore_weighted_speedup_sane():
     batch = multicore_batch(["milc_like", "soplex_like", "lbm_like",
                              "gcc_like"], 3000)

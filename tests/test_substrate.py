@@ -164,6 +164,21 @@ def test_scheduler_retires_and_traces():
     assert st["n_req"] > 0
 
 
+def test_admission_policies_discriminate():
+    """ROADMAP serving-realism fix: with prompt-prefill page touches and
+    staggered arrivals, charge-aware admission must produce a hot-page
+    hit rate distinct from (and better than) FIFO — the policy study no
+    longer degenerates."""
+    from repro.serving.study import admission_hot_rate, build_scheduler
+    fifo = build_scheduler(False)
+    aware = build_scheduler(True)
+    assert fifo.stats["admit_probes"] > 0
+    assert aware.stats["admit_probes"] > 0
+    rf, ra = admission_hot_rate(fifo), admission_hot_rate(aware)
+    assert ra != rf, "policies must produce distinct hot-page hit rates"
+    assert ra > rf, "charge-aware admission should pick hotter requests"
+
+
 # ----------------------------------------------------------------- sharding
 
 def test_sharding_rules_divisibility():
