@@ -43,9 +43,10 @@ def _record(results: dict, row: str) -> None:
 
 
 def main() -> None:
-    from benchmarks import (capacity, charge_model_bench, duration, energy,
-                            geometry, kernels_bench, rltl, roofline_bench,
-                            serving_trace, speedup, sweep_bench)
+    from benchmarks import (aldram, capacity, charge_model_bench, duration,
+                            energy, geometry, kernels_bench, rltl,
+                            roofline_bench, serving_trace, speedup,
+                            sweep_bench)
     mods = [
         ("charge_model", charge_model_bench),
         ("rltl", rltl),
@@ -55,6 +56,7 @@ def main() -> None:
         ("capacity", capacity),
         ("duration", duration),
         ("geometry", geometry),
+        ("aldram", aldram),
         ("serving", serving_trace),
         ("kernels", kernels_bench),
         ("roofline", roofline_bench),

@@ -1,0 +1,23 @@
+"""AL-DRAM evaluation config (arXiv:1805.03047 over the Table 5.1 system).
+
+Per-bank timing margins at the evaluation's operating-temperature bins
+(55/70/85°C); 85°C is the DDR3 guardband, where the ``aldram`` kind is
+bitwise-identical to ``base`` (DESIGN.md §9).  ``TEMPERATURES`` pairs
+with the ``temperature`` experiment axis::
+
+    Experiment(traces=..., axes={"temperature": list(TEMPERATURES),
+                                 "mechanism": ["aldram", "cc_aldram"]})
+"""
+from repro.core import MechanismConfig, SimConfig, TEMPERATURE_BINS_C
+from repro.core.aldram import ALDRAMConfig
+
+SIM_CONFIG = SimConfig(mech=MechanismConfig(kind="aldram"))
+
+#: label -> module profile at each thermal bin (default process bin)
+TEMPERATURES = {f"{int(t)}C": ALDRAMConfig(temperature_c=t)
+                for t in TEMPERATURE_BINS_C}
+
+MECHANISMS = {
+    "aldram": MechanismConfig(kind="aldram"),
+    "cc_aldram": MechanismConfig(kind="cc_aldram"),
+}

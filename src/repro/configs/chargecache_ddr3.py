@@ -11,4 +11,6 @@ MECHANISMS = {
     "cc_nuat": MechanismConfig(kind="cc_nuat"),
     "rltl": MechanismConfig(kind="rltl"),
     "lldram": MechanismConfig(kind="lldram"),
+    "aldram": MechanismConfig(kind="aldram"),
+    "cc_aldram": MechanismConfig(kind="cc_aldram"),
 }

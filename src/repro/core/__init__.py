@@ -8,14 +8,16 @@ from repro.core.timing import (TimingParams, TimingVec, DDR3_1600,
                                ms_to_cycles, ns_to_cycles, CYCLE_NS)
 from repro.core.dram import (DRAMConfig, DDR3_SYSTEM, DRAMEnvelope,
                              GeomParams, NO_ROW, envelope_of, geom_params)
+from repro.core.aldram import ALDRAMConfig, TEMPERATURE_BINS_C
 from repro.core.hcrac import HCRACConfig, HCRACParams, HCRACState
 from repro.core.simulator import (MechanismConfig, MechParams, SimConfig,
                                   SimShape, mech_params, sim_shape, simulate,
                                   sweep, sweep_traces, weighted_speedup,
                                   default_nuat_bins, RLTL_EDGES_MS)
-from repro.core import charge_model, energy, rltl, traces
+from repro.core import aldram, charge_model, energy, rltl, traces
 
 __all__ = [
+    "ALDRAMConfig", "TEMPERATURE_BINS_C", "aldram",
     "TimingParams", "TimingVec", "DDR3_1600", "DDR3_1600_CC_1MS",
     "lowered_for_duration", "ms_to_cycles", "ns_to_cycles", "CYCLE_NS",
     "DRAMConfig", "DDR3_SYSTEM", "DRAMEnvelope", "GeomParams",

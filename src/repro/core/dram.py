@@ -134,6 +134,16 @@ def global_row_id(geom: GeomParams, global_bank, row):
     return global_bank * geom.n_rows + row
 
 
+def in_active_geometry(geom: GeomParams, bank, row):
+    """Traced bool: (bank, row) directly addresses the active geometry —
+    exactly the domain on which ``fold_address`` is the identity (the
+    padded-parity case; property-tested in tests/test_geometry.py)."""
+    bank = jnp.asarray(bank)
+    row = jnp.asarray(row)
+    return ((bank >= 0) & (bank < geom.banks_total)
+            & (row >= 0) & (row < geom.n_rows))
+
+
 def fold_address(geom: GeomParams, bank, row):
     """Map a trace's (bank, row) into the active geometry.
 

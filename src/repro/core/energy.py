@@ -12,6 +12,8 @@ from __future__ import annotations
 
 import dataclasses
 
+import numpy as np
+
 from repro.core.timing import TimingParams, DDR3_1600, CYCLE_NS
 
 
@@ -37,6 +39,15 @@ def energy_nj(stats: dict, timing: TimingParams = DDR3_1600,
     active geometry the simulator recorded into ``stats`` (so a geometry
     sweep's cells account their own channel/rank counts), else from the
     Table 5.1 default.  ``n_channels`` remains as an explicit override.
+
+    Per-bank offsets thread through two paths: the scalar ACT energy is
+    charged over ``act_ras_sum`` — the tRAS windows *actually selected*
+    per ACT, so AL-DRAM's per-bank margins (and ChargeCache's hit
+    lowering) shorten the restore energy exactly as they shorten the
+    timing — and, when the simulator's per-bank accumulators are present
+    (``bank_act_ras_sum``), the same charge is also reported bank by
+    bank as ``act_per_bank`` (summing to ``act``), which is what the
+    AL-DRAM benchmark's per-bank spread reads (DESIGN.md §9).
     """
     p = power
     cyc_s = CYCLE_NS * 1e-9
@@ -74,4 +85,8 @@ def energy_nj(stats: dict, timing: TimingParams = DDR3_1600,
            dict(act=e_act, pre=e_pre, rd=e_rd, wr=e_wr, ref=e_ref,
                 background=e_bg).items()}
     out["total"] = sum(out.values())
+    if stats.get("bank_act_ras_sum") is not None:
+        per_bank_ras = np.asarray(stats["bank_act_ras_sum"], dtype=float)
+        out["act_per_bank"] = ((p.idd0 - p.idd3n) * p.vdd * per_bank_ras
+                               * cyc_s * scale)
     return out

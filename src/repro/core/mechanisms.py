@@ -13,7 +13,9 @@ mixing every registered kind, and a new mechanism is one
 Registration order is semantic: it is the application order of
 ``select``.  The builtins register as LL-DRAM → ChargeCache → NUAT,
 reproducing the thesis ordering (always-lowered base, then HCRAC-hit
-override, then NUAT minimum) bit-for-bit.
+override, then NUAT minimum) bit-for-bit; RLTL and AL-DRAM fold after
+as elementwise minima (minima commute, but AL-DRAM *must* follow the
+ChargeCache override so ``cc_aldram`` hits take min(CC, bank margin)).
 
 A registered name is also a *kind* accepted by ``MechanismConfig``.  A
 kind may be a pure composition of other policies' blocks
@@ -33,6 +35,7 @@ from typing import NamedTuple, Sequence
 
 import jax.numpy as jnp
 
+from repro.core import aldram as aldram_lib
 from repro.core import charge_model
 from repro.core.timing import (TimingParams, TimingVec, DDR3_1600,
                                ms_to_cycles)
@@ -48,6 +51,7 @@ _KNOB_CANONICAL = {
         h, n_entries=64 * h.n_ways, caching_cycles=800_000),
     "lowered": lambda _: DDR3_1600.with_reduction(4, 8),
     "nuat_bins": lambda _: (),
+    "aldram": lambda _: aldram_lib.ALDRAMConfig(),
 }
 
 
@@ -65,6 +69,10 @@ class SelectCtx(NamedTuple):
     tslp: jnp.ndarray       # cycles since this row's last PRE, from the
                             # per-bank last-PRE register (INF if unknown)
     needs_act: jnp.ndarray  # bool: this request activates (not a row hit)
+    bank: jnp.ndarray       # global bank id of this request, already
+                            # folded into the active geometry (< the
+                            # traced banks_total — per-bank tables padded
+                            # to the envelope are safe to index with it)
 
 
 class MechanismPolicy:
@@ -97,7 +105,7 @@ class MechanismPolicy:
     #: means "itself if block-bearing, else nothing".
     components: tuple[str, ...] | None = None
     uses_hcrac: bool = False
-    consumes: tuple[str, ...] = ("hcrac", "lowered", "nuat_bins")
+    consumes: tuple[str, ...] = ("hcrac", "lowered", "nuat_bins", "aldram")
 
     name: str = ""        # set by register_mechanism
     has_block: bool = False  # set by register_mechanism (structure probe)
@@ -354,4 +362,62 @@ class RLTL(MechanismPolicy):
 class ChargeCacheNUAT(MechanismPolicy):
     """Composition: ChargeCache hit override + NUAT minimum (thesis §6.4)."""
     components = ("chargecache", "nuat")
+    consumes = ()
+
+
+@register_mechanism("aldram")
+class ALDRAM(MechanismPolicy):
+    """AL-DRAM (arXiv:1805.03047): profiled per-bank timing margins.
+
+    The block is a per-bank (tRCD, tRAS) table sized to the grid's
+    padded ``DRAMEnvelope`` (the ``n_banks_padded`` hint injected by
+    ``mech_params``) and derived host-side from the module's temperature
+    / process bin (``repro.core.aldram``, DESIGN.md §9).  Entries beyond
+    a point's active ``banks_total`` are never indexed — ``ctx.bank`` is
+    already folded into the active geometry — and the derivation is
+    position-stable, so padded and exact-geometry runs agree bitwise.
+
+    ``select`` takes the elementwise *minimum* with the running
+    selection; since ChargeCache folds first (registration order), a
+    ``cc_aldram`` hit uses min(ChargeCache lowered, bank margin) and a
+    miss still gets the bank margin — the static and dynamic levers
+    compose instead of shadowing each other.  At the 85°C reference
+    temperature the table clips to the spec and the policy is a bitwise
+    no-op (the guardband the spec already pays).
+    """
+    consumes = ("aldram",)
+
+    def block(self, mech, timing, enabled, hints):
+        if mech is None:  # structure probe: a spec-valued (inert) table
+            nb = hints.get("n_banks_padded", 16)
+            rcd = [timing.tRCD] * nb
+            ras = [timing.tRAS] * nb
+        else:
+            # fail loudly rather than fall back: an undersized table
+            # would be indexed with JAX's clamping gather and silently
+            # reuse the last bank's timings for every bank beyond it
+            assert "n_banks_padded" in hints, (
+                "aldram blocks must be built through mech_params, which "
+                "injects the envelope bank count as the reserved "
+                "'n_banks_padded' hint")
+            nb = hints["n_banks_padded"]
+            rcd, ras = aldram_lib.per_bank_timings(mech.aldram, timing, nb)
+        return {"enable": jnp.bool_(enabled),
+                "rcd": jnp.asarray(rcd, jnp.int32),
+                "ras": jnp.asarray(ras, jnp.int32)}
+
+    def select(self, block, ctx, rcd, ras):
+        on = block["enable"]
+        rcd = jnp.where(on, jnp.minimum(rcd, block["rcd"][ctx.bank]), rcd)
+        ras = jnp.where(on, jnp.minimum(ras, block["ras"][ctx.bank]), ras)
+        return rcd, ras
+
+
+@register_mechanism("cc_aldram")
+class ChargeCacheALDRAM(MechanismPolicy):
+    """Composition: ChargeCache × AL-DRAM — the thesis-direction
+    interaction study.  A HCRAC hit uses min(ChargeCache lowered timing,
+    the bank's AL-DRAM margin); every other ACT still gets the bank
+    margin (fold order: ChargeCache override, then the AL-DRAM min)."""
+    components = ("chargecache", "aldram")
     consumes = ()

@@ -51,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import aldram as aldram_lib
 from repro.core import hcrac as hcrac_lib
 from repro.core import dram as dram_lib
 from repro.core.dram import (DRAMConfig, DDR3_SYSTEM, DRAMEnvelope,
@@ -73,12 +74,16 @@ RLTL_EDGES_MS = (0.125, 0.25, 0.5, 1.0, 2.0, 4.0, 8.0, 16.0, 32.0)
 @dataclasses.dataclass(frozen=True)
 class MechanismConfig:
     #: any kind registered in ``repro.experiment.registry`` (builtins:
-    #: base | chargecache | nuat | cc_nuat | lldram)
+    #: base | chargecache | nuat | cc_nuat | lldram | rltl | aldram |
+    #: cc_aldram)
     kind: str = "chargecache"
     hcrac: hcrac_lib.HCRACConfig = hcrac_lib.HCRACConfig()
     lowered: TimingParams = dataclasses.field(
         default_factory=lambda: DDR3_1600.with_reduction(4, 8))
     nuat_bins: tuple = ()
+    #: AL-DRAM module profile (temperature / process bin) — consumed by
+    #: the ``aldram`` policy's per-bank timing table (DESIGN.md §9)
+    aldram: aldram_lib.ALDRAMConfig = aldram_lib.ALDRAMConfig()
 
     def __post_init__(self):
         assert self.kind in registry.names(), (
@@ -145,14 +150,24 @@ def sim_shape(cfg: SimConfig, n_sets_max: int | None = None,
     )
 
 
-def mech_params(cfg: SimConfig, hints: dict | None = None) -> MechParams:
+def mech_params(cfg: SimConfig, hints: dict | None = None,
+                envelope: DRAMEnvelope | None = None) -> MechParams:
     """Flatten ``cfg``'s numeric content into the traced params pytree.
 
     Each registered mechanism policy contributes its own block (see
     ``repro.experiment.registry``); ``hints`` carries grid-wide padding
     facts (e.g. the max NUAT bin count) so every point of a sweep shares
-    one block structure.  All padding is behaviour-neutral (bitwise).
+    one block structure.  ``envelope`` is the grid's padded geometry
+    (defaults to this config's exact envelope, matching ``sim_shape``);
+    its bank count is injected into every policy's hints as the reserved
+    ``n_banks_padded`` key, so per-bank param tables (the ``aldram``
+    block) size to the shared envelope.  All padding is
+    behaviour-neutral (bitwise).
     """
+    env = envelope if envelope is not None else envelope_of([cfg.dram])
+    hints = hints if hints is not None else registry.pad_hints([cfg.mech])
+    hints = {n: {**h, "n_banks_padded": env.max_banks_total}
+             for n, h in hints.items()}
     return MechParams(
         timing=timing_lib.traced(cfg.timing),
         geom=geom_params(cfg.dram),
@@ -191,6 +206,12 @@ STAT_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
              "hcrac_lookups", "row_hits", "row_closed", "row_conflicts",
              "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts")
 
+#: [NB]-shaped stat accumulators (sized to the padded envelope, scattered
+#: at the folded bank index, so entries past the active ``banks_total``
+#: stay zero — the per-bank view AL-DRAM's offset study and the
+#: geometry-masking tests read; DESIGN.md §9)
+BANK_STAT_KEYS = ("bank_acts", "bank_act_ras_sum")
+
 
 class Events(NamedTuple):
     """Per-step ACT/PRE event record (scan outputs, for the RLTL post-pass).
@@ -216,6 +237,7 @@ def _init_state(shape: SimShape, n_cores: int, max_len: int) -> SimState:
     nch = shape.envelope.max_channels
     z = lambda *s: jnp.zeros(s, jnp.int32)
     stats = {k: jnp.int32(0) for k in STAT_KEYS}
+    stats.update({k: z(nb) for k in BANK_STAT_KEYS})
     return SimState(
         ptr=z(n_cores), last_issue=z(n_cores), last_complete=z(n_cores),
         mshr_ring=z(n_cores, shape.mshr), ring_idx=z(n_cores),
@@ -290,7 +312,7 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
     # ``enable`` leaf, so one compiled body serves every registered kind.
     tsr = time_since_refresh(geom, T, row, t_act)
     ctx = registry.SelectCtx(timing=T, geom=geom, hcrac_hit=cc_hit, tsr=tsr,
-                             tslp=tslp, needs_act=needs_act)
+                             tslp=tslp, needs_act=needs_act, bank=bank)
     rcd, ras = registry.select_timings(p.mech, ctx)
     lowered_used = needs_act & ((rcd < T.tRCD) | (ras < T.tRAS))
 
@@ -352,6 +374,12 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
     _acc(stats, "act_ras_sum", m * needs_act * ras)
     ref8 = needs_act & measure & (tsr < ms_to_cycles(8.0))
     _acc(stats, "refresh8ms_acts", ref8)
+    # per-bank scatter-adds: a masked (m=0) or padded step adds zero, and
+    # ``bank`` is always < the active banks_total, so envelope-padded
+    # entries stay exactly zero (the §8/§9 masking invariant, tested)
+    stats["bank_acts"] = stats["bank_acts"].at[bank].add(m * needs_act)
+    stats["bank_act_ras_sum"] = stats["bank_act_ras_sum"].at[bank].add(
+        m * needs_act * ras)
 
     # ACT/PRE events for the RLTL post-pass (see Events docstring).
     events = Events(
@@ -654,7 +682,7 @@ def _grid_shape_and_params(grid: Sequence[SimConfig],
     shape = sim_shape(c0, n_sets_max=n_sets_max, envelope=env)
     stacked = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs),
-        *[mech_params(cfg, hints=hints) for cfg in grid])
+        *[mech_params(cfg, hints=hints, envelope=env) for cfg in grid])
     return shape, stacked
 
 

@@ -71,18 +71,18 @@ def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
 
     Dominant terms: the per-point HCRAC state (three int32 arrays, double
     counted for the scan's in/out carry), the per-bank/per-channel carry
-    sized by the padded geometry *envelope* (six int32 bank arrays —
-    open-row, three ready times, the two last-PRE registers — plus two
-    bus arrays; a 1024-bank envelope point carries ~50 KB where the old
-    constant assumed Table 5.1's 16 banks) and — when events are
-    collected for RLTL — the per-step event stream (7 int32 scan
-    outputs).  The trace itself is shared across the grid axis and
-    excluded.  With ``sweep_traces`` the whole thing multiplies by the
-    batch axis.
+    sized by the padded geometry *envelope* (eight int32 bank arrays —
+    open-row, three ready times, the two last-PRE registers, the two
+    per-bank stat accumulators — plus two bus arrays; a 1024-bank
+    envelope point carries ~66 KB where the old constant assumed Table
+    5.1's 16 banks) and — when events are collected for RLTL — the
+    per-step event stream (7 int32 scan outputs).  The trace itself is
+    shared across the grid axis and excluded.  With ``sweep_traces`` the
+    whole thing multiplies by the batch axis.
     """
     per = 4096  # carry scalars, stats, issue-model state, slack
     per += n_sets_max * n_ways * 3 * 4 * 2
-    per += (6 * n_banks_total + 2 * n_channels) * 4 * 2
+    per += (8 * n_banks_total + 2 * n_channels) * 4 * 2
     per += n_cores * (mshr + 8) * 4
     if rltl:
         per += 7 * 4 * n_steps

@@ -93,6 +93,20 @@ def _axis_geometry(cfg: SimConfig, geom) -> SimConfig:
     return dataclasses.replace(cfg, dram=geom)
 
 
+@register_axis("temperature")
+def _axis_temperature(cfg: SimConfig, temp_c) -> SimConfig:
+    """AL-DRAM operating temperature (°C): sets the module profile the
+    ``aldram`` policy derives its per-bank timing table from
+    (``repro.core.aldram``, DESIGN.md §9).  Mechanisms that do not
+    consume the ``aldram`` knob dedup across this axis — a ``base`` or
+    ``chargecache`` point is the same run at every temperature — so a
+    temperature × geometry × mechanism grid stays one compilation with
+    no redundant launches."""
+    ald = dataclasses.replace(cfg.mech.aldram, temperature_c=float(temp_c))
+    return dataclasses.replace(
+        cfg, mech=dataclasses.replace(cfg.mech, aldram=ald))
+
+
 @register_axis("policy")
 def _axis_policy(cfg: SimConfig, policy: str) -> SimConfig:
     return dataclasses.replace(cfg, policy=policy)

@@ -1,0 +1,213 @@
+"""AL-DRAM per-bank timing surfaces (DESIGN.md §9).
+
+Contracts:
+
+* The margin model vanishes at the 85°C guardband: ``aldram`` at the
+  reference temperature is *bitwise* the baseline, and margins grow
+  monotonically as the module cools.
+* The per-bank table is position-stable (envelope padding never changes
+  an addressed bank's timings) and bounded by [1, spec].
+* ``cc_aldram`` composes by the documented rule: HCRAC hit →
+  min(ChargeCache lowered, bank margin); miss → bank margin.
+* The per-bank stat accumulators are envelope-masked (padded banks stay
+  zero) and consistent with the scalar stats; ``energy_nj`` threads
+  them into a per-bank ACT-energy breakdown.
+* The ``temperature`` axis dedups for non-aldram mechanisms and
+  round-trips through ``Results`` on a 3-axis grid.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (ALDRAMConfig, DRAMConfig, MechanismConfig, SimConfig,
+                        DDR3_1600, simulate, sweep)
+from repro.core import aldram as aldram_lib
+from repro.core.dram import DDR3_SYSTEM, geom_params
+from repro.core.energy import energy_nj
+from repro.core.simulator import INF, mech_params
+from repro.core.timing import traced
+from repro.core.traces import single_core_batch
+from repro.experiment import Experiment, Results, registry
+
+BITWISE_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
+                "hcrac_lookups", "row_hits", "row_closed", "row_conflicts",
+                "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts",
+                "total_cycles")
+
+
+def _cfg(temp_c: float, kind: str = "aldram", dram=DDR3_SYSTEM) -> SimConfig:
+    return SimConfig(dram=dram, mech=MechanismConfig(
+        kind=kind, aldram=ALDRAMConfig(temperature_c=temp_c)))
+
+
+# ----------------------------------------------------------- margin model
+
+def test_margin_vanishes_at_guardband():
+    """85°C == the DDR3 spec's own guardband: zero margin by design."""
+    assert aldram_lib.equivalent_idle_ms(85.0) == pytest.approx(64.0)
+    assert aldram_lib.module_timings(
+        ALDRAMConfig(temperature_c=85.0), DDR3_1600) == (DDR3_1600.tRCD,
+                                                         DDR3_1600.tRAS)
+    rcd, ras = aldram_lib.per_bank_timings(
+        ALDRAMConfig(temperature_c=85.0), DDR3_1600, 32)
+    assert (rcd == DDR3_1600.tRCD).all() and (ras == DDR3_1600.tRAS).all()
+
+
+def test_per_bank_table_bounds_monotone_and_position_stable():
+    spec = DDR3_1600
+    prev_rcd = prev_ras = None
+    for t in (45.0, 55.0, 70.0, 85.0):  # cooler -> larger margin
+        ald = ALDRAMConfig(temperature_c=t, process_seed=3)
+        rcd, ras = aldram_lib.per_bank_timings(ald, spec, 32)
+        assert (1 <= rcd).all() and (rcd <= spec.tRCD).all()
+        assert (1 <= ras).all() and (ras <= spec.tRAS).all()
+        if prev_rcd is not None:  # monotone per bank, not just on average
+            assert (prev_rcd <= rcd).all() and (prev_ras <= ras).all()
+        prev_rcd, prev_ras = rcd, ras
+        # position stability: the envelope-padded table agrees with the
+        # exact table on every addressable bank (the §9 masking invariant)
+        rcd_pad, ras_pad = aldram_lib.per_bank_timings(ald, spec, 128)
+        assert (rcd_pad[:32] == rcd).all() and (ras_pad[:32] == ras).all()
+    # process bins differ somewhere (the per-bank spread is real)
+    a = aldram_lib.per_bank_timings(ALDRAMConfig(55.0, process_seed=0),
+                                    spec, 64)
+    b = aldram_lib.per_bank_timings(ALDRAMConfig(55.0, process_seed=1),
+                                    spec, 64)
+    assert (a[0] != b[0]).any() or (a[1] != b[1]).any()
+
+
+# ------------------------------------------------------- mechanism runs
+
+def test_aldram_at_guardband_is_baseline_bitwise():
+    batch = single_core_batch("milc_like", 1200, seed=5)
+    base = simulate(batch, SimConfig(mech=MechanismConfig(kind="base")))
+    hot = simulate(batch, _cfg(85.0))
+    for k in BITWISE_KEYS:
+        assert int(base[k]) == int(hot[k]), k
+    assert np.array_equal(base["core_end"], hot["core_end"])
+    assert int(hot["acts_lowered"]) == 0
+
+
+def test_aldram_cooler_is_faster():
+    batch = single_core_batch("mcf_like", 1200, seed=3)
+    cells = sweep(batch, [_cfg(t) for t in (55.0, 70.0, 85.0)], rltl=False)
+    cyc = [int(s["total_cycles"]) for s in cells]
+    assert cyc[0] <= cyc[1] <= cyc[2]
+    assert cyc[0] < cyc[2], "the 55°C margin must actually bite"
+
+
+def test_cc_aldram_select_rule():
+    """Unit-test the fold: hit -> min(CC lowered, bank margin); miss ->
+    bank margin — directly on the registry's select chain."""
+    cfg = _cfg(55.0, kind="cc_aldram")
+    p = mech_params(cfg)
+    bank = 3
+    table_rcd, table_ras = aldram_lib.per_bank_timings(
+        cfg.mech.aldram, cfg.timing, DDR3_SYSTEM.banks_total)
+    low = cfg.mech.lowered
+
+    def run_select(hit):
+        ctx = registry.SelectCtx(
+            timing=traced(cfg.timing), geom=geom_params(cfg.dram),
+            hcrac_hit=jnp.bool_(hit), tsr=jnp.int32(10**6), tslp=INF,
+            needs_act=jnp.bool_(True), bank=jnp.int32(bank))
+        return registry.select_timings(p.mech, ctx)
+
+    rcd_hit, ras_hit = run_select(True)
+    assert int(rcd_hit) == min(low.tRCD, int(table_rcd[bank]))
+    assert int(ras_hit) == min(low.tRAS, int(table_ras[bank]))
+    rcd_miss, ras_miss = run_select(False)
+    assert int(rcd_miss) == int(table_rcd[bank])
+    assert int(ras_miss) == int(table_ras[bank])
+
+
+# ------------------------------------- per-bank stats + energy threading
+
+def test_bank_stats_envelope_masked_and_consistent():
+    """Per-bank accumulators of a padded mixed-geometry sweep: active
+    entries sum to the scalar stats, padded entries are exactly zero."""
+    batch = single_core_batch("soplex_like", 1100, seed=7)
+    small = DRAMConfig(n_channels=1)           # 8 banks in a 32-bank pad
+    big = DRAMConfig(n_channels=2, n_banks=16)
+    for cell, cfg in zip(
+            sweep(batch, [_cfg(55.0, dram=small), _cfg(55.0, dram=big)],
+                  rltl=False),
+            (small, big)):
+        nb = cfg.banks_total
+        assert cell["bank_acts"].shape == (32,)
+        assert not cell["bank_acts"][nb:].any(), "padded bank addressed"
+        assert not cell["bank_act_ras_sum"][nb:].any()
+        assert int(cell["bank_acts"].sum()) == int(cell["acts"])
+        assert (int(cell["bank_act_ras_sum"].sum())
+                == int(cell["act_ras_sum"]))
+
+
+def test_energy_threads_per_bank_offsets():
+    batch = single_core_batch("lbm_like", 1100, seed=2)
+    cool, hot = sweep(batch, [_cfg(55.0), _cfg(85.0)], rltl=False)
+    e_cool, e_hot = energy_nj(cool), energy_nj(hot)
+    # per-bank ACT energy sums to the scalar ACT term, bank by bank
+    for e in (e_cool, e_hot):
+        assert e["act_per_bank"].shape == cool["bank_acts"].shape
+        assert e["act_per_bank"].sum() == pytest.approx(e["act"])
+    # the margin shortens restore windows AND runtime -> less energy
+    assert e_cool["act"] < e_hot["act"]
+    assert e_cool["total"] < e_hot["total"]
+
+
+# --------------------------------------------- temperature axis, Results
+
+def test_temperature_axis_dedups_non_aldram_mechanisms():
+    batch = single_core_batch("gcc_like", 800, seed=4)
+    res = Experiment(traces=batch,
+                     axes={"mechanism": ["base", "chargecache", "aldram"],
+                           "temperature": [55.0, 70.0, 85.0]}).run()
+    # base/chargecache are the same run at every temperature; aldram is
+    # distinct per bin
+    assert res.meta["n_configs"] == 9
+    assert res.meta["n_unique"] == 1 + 1 + 3
+    b = res.sel(mechanism="base")
+    assert (int(b.point(temperature=55.0)["total_cycles"])
+            == int(b.point(temperature=85.0)["total_cycles"]))
+
+
+def test_results_roundtrip_three_axis_grid():
+    """mechanism × geometry × temperature: sel/pairwise semantics and
+    to_json/from_json label fidelity on the full 3-axis grid."""
+    batch = single_core_batch("milc_like", 900, seed=9)
+    temps = (55.0, 70.0, 85.0)
+    res = Experiment(traces=batch,
+                     axes={"mechanism": ["base", "aldram", "cc_aldram"],
+                           "geometry": ["ddr3_1ch", "ddr3_2ch"],
+                           "temperature": list(temps)}).run()
+    assert res.dims == ("mechanism", "geometry", "temperature")
+    assert res.shape == (3, 2, 3)
+
+    # scalar sel drops a dim; list sel subsets it
+    one = res.sel(geometry="ddr3_1ch")
+    assert one.dims == ("mechanism", "temperature")
+    sub = res.sel(temperature=[55.0, 85.0])
+    assert sub.coords["temperature"] == (55.0, 85.0)
+
+    # pairwise vs base at a fixed geometry: per-temperature speedups,
+    # monotone toward the cool bin and exactly 1.0 at the guardband
+    sp = one.pairwise("mechanism", "base",
+                      lambda b, s: (int(b["total_cycles"])
+                                    / max(int(s["total_cycles"]), 1)))
+    assert set(sp) == {"aldram", "cc_aldram"}
+    al = sp["aldram"]
+    assert al.shape == (3,)
+    assert al[0] >= al[1] >= al[2] == pytest.approx(1.0)
+
+    back = Results.from_json(res.to_json())
+    assert back.dims == res.dims and back.coords == res.coords
+    assert back.coords["temperature"] == temps
+    assert back.metrics == res.metrics
+    for a, b in zip(res.cells.flat, back.cells.flat):
+        for k in BITWISE_KEYS:
+            assert int(a[k]) == int(b[k]), k
+        assert np.array_equal(a["bank_acts"], b["bank_acts"])
+        assert np.array_equal(a["core_end"], b["core_end"])

@@ -39,12 +39,18 @@ def _assert_cell_matches(ref: dict, got: dict):
 
 def test_experiment_matches_sweep_even_chunked():
     """Axes expansion + dedup + chunking reproduce a direct sweep() of the
-    expanded grid bitwise, and >= 2 chunked launches share one compile."""
+    expanded grid bitwise, and >= 2 chunked launches share one compile.
+
+    The mechanism axis is the ONE parametrized list — every registered
+    kind (aldram/cc_aldram included) — so any future mechanism inherits
+    the chunked-parity check just by registering (its padded-vs-exact
+    twin lives in tests/test_geometry.py)."""
     batch = single_core_batch("milc_like", 1777, seed=9)  # distinctive shape
+    assert len(registry.names()) >= 8
     exp = Experiment(traces=batch,
-                     axes={"mechanism": ["base", "chargecache", "lldram"],
+                     axes={"mechanism": list(registry.names()),
                            "capacity": (48, 96)},
-                     chunk_size=2)
+                     chunk_size=3)
     before = sim_mod._run_batched._cache_size()
     res = exp.run()
     compiles = sim_mod._run_batched._cache_size() - before

@@ -14,14 +14,17 @@ Contracts:
   geometry axis labels) are behaviour-neutral.
 """
 
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 from repro.core import (DRAMConfig, MechanismConfig, SimConfig, envelope_of,
                         simulate, sweep)
+from repro.core import dram as dram_lib
 from repro.core import simulator as sim_mod
-from repro.core.dram import DRAMEnvelope
-from repro.core.traces import single_core_batch
+from repro.core.dram import DRAMEnvelope, fold_address, geom_params
+from repro.core.traces import WORKLOADS, single_core_batch
 from repro.experiment import (Experiment, GEOMETRY_PRESETS, Results,
                               registry)
 
@@ -55,8 +58,11 @@ def test_padded_geometry_parity_every_mechanism():
     bitwise-identical to exact-shape simulate() for EVERY registered
     mechanism kind."""
     batch = single_core_batch("milc_like", N, seed=5)
+    # ONE parametrized list for parity sweeps: every registered kind —
+    # a future mechanism inherits this check (and the chunked-parity
+    # check in tests/test_experiment.py) just by registering.
     kinds = registry.names()
-    assert len(kinds) >= 6  # base/cc/nuat/cc_nuat/rltl/lldram at least
+    assert len(kinds) >= 8  # base/cc/nuat/cc_nuat/rltl/lldram/aldram/cc_al
     grid = [SimConfig(dram=g, mech=MechanismConfig(kind=k))
             for g in (GEOM_SMALL, GEOM_BIG) for k in kinds]
     swept = sweep(batch, grid)
@@ -170,6 +176,81 @@ def test_geometry_aware_bytes_per_point():
                           n_cores=1, mshr=8, n_traces=1, rltl=False,
                           n_banks_total=1024, n_channels=64)
     assert big > small + 6 * (1024 - 16) * 4  # carry in/out both counted
+
+
+# ---------------------------------------------------------------------
+# fold_address property tests (hypothesis via tests/_hypo.py): folded
+# addresses always land inside the active geometry, padded banks are
+# never addressed, and the identity geometry is a bitwise no-op.
+# ---------------------------------------------------------------------
+
+#: (n_channels, n_ranks, n_banks, n_rows) of a randomized active geometry
+_GEOM_DIMS = st.tuples(st.integers(1, 4), st.integers(1, 2),
+                       st.integers(1, 16), st.integers(64, 65536))
+
+
+@settings(max_examples=60, deadline=None)
+@given(_GEOM_DIMS, st.integers(0, 2**20), st.integers(0, 2**31 - 1))
+def test_fold_address_lands_in_active_geometry(dims, bank, row):
+    """Any (bank, row) — far beyond the active counts included — folds
+    into the active geometry: the simulator can never address a padded
+    bank/channel/row, whatever envelope the grid shares."""
+    nch, nrk, nb, nr = dims
+    cfg = DRAMConfig(n_channels=nch, n_ranks=nrk, n_banks=nb, n_rows=nr)
+    g = geom_params(cfg)
+    fb, fr = fold_address(g, jnp.int32(bank), jnp.int32(row))
+    assert 0 <= int(fb) < cfg.banks_total
+    assert 0 <= int(fr) < cfg.n_rows
+    assert 0 <= int(dram_lib.channel_of(g, fb)) < cfg.n_channels
+    assert bool(dram_lib.in_active_geometry(g, fb, fr))
+    # the HCRAC tag of the folded address stays in the active tag space
+    assert 0 <= int(dram_lib.global_row_id(g, fb, fr)) < (
+        cfg.banks_total * cfg.n_rows)
+    # identity exactly on the active domain
+    if bank < cfg.banks_total and row < cfg.n_rows:
+        assert (int(fb), int(fr)) == (bank, row)
+    else:
+        assert not bool(dram_lib.in_active_geometry(
+            g, jnp.int32(bank), jnp.int32(row)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.sampled_from([w.name for w in WORKLOADS]),
+       st.integers(0, 2**16), _GEOM_DIMS)
+def test_fold_address_on_traces(name, seed, dims):
+    """Whole generated traces fold into randomized active geometries
+    (vectorized), and fold identically on the geometry they were
+    generated against (the padded-parity precondition)."""
+    batch = single_core_batch(name, 192, seed=seed)
+    bank = jnp.asarray(batch.bank[0], jnp.int32)
+    row = jnp.asarray(batch.row[0], jnp.int32)
+    # identity on the generating geometry
+    gid = geom_params(DRAMConfig())
+    fb, fr = fold_address(gid, bank, row)
+    assert np.array_equal(np.asarray(fb), batch.bank[0])
+    assert np.array_equal(np.asarray(fr), batch.row[0])
+    # containment on a randomized (usually smaller) active geometry
+    nch, nrk, nb, nr = dims
+    cfg = DRAMConfig(n_channels=nch, n_ranks=nrk, n_banks=nb, n_rows=nr)
+    fb, fr = fold_address(geom_params(cfg), bank, row)
+    assert int(jnp.max(fb)) < cfg.banks_total and int(jnp.min(fb)) >= 0
+    assert int(jnp.max(fr)) < cfg.n_rows and int(jnp.min(fr)) >= 0
+    assert bool(jnp.all(dram_lib.in_active_geometry(geom_params(cfg),
+                                                    fb, fr)))
+
+
+def test_padded_banks_never_addressed_in_simulation():
+    """End-to-end masking witness: the per-bank ACT accumulators of a
+    padded sweep stay exactly zero past every point's active count."""
+    batch = single_core_batch("omnetpp_like", 1000, seed=6)
+    grid = [SimConfig(dram=g, mech=MechanismConfig(kind="chargecache"))
+            for g in (DRAMConfig(n_channels=1, n_banks=4), GEOM_SMALL,
+                      GEOM_BIG)]
+    for cfg, cell in zip(grid, sweep(batch, grid, rltl=False)):
+        nb = cfg.dram.banks_total
+        assert cell["bank_acts"].shape == (GEOM_BIG.banks_total,)
+        assert not cell["bank_acts"][nb:].any()
+        assert int(cell["bank_acts"].sum()) == int(cell["acts"])
 
 
 def test_unknown_geometry_preset_rejected():

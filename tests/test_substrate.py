@@ -179,6 +179,54 @@ def test_admission_policies_discriminate():
     assert ra > rf, "charge-aware admission should pick hotter requests"
 
 
+def test_admission_hot_cold_mix_regression():
+    """Regression lock for the PR 3 admission fix, on a *constructed*
+    hot/cold mix: long-decoding cold requests whose page charge has
+    fully decayed are queued ahead of freshly-prefilled hot requests.
+    FIFO admits in arrival order, so by the time the hot requests reach
+    a slot their short caching window has passed too; charge-aware
+    admission reorders them first while still hot.  The margin must be
+    real (the old degenerate study had ra == rf): an explicit
+    non-degeneracy gap, not just an inequality.
+
+    The hot-page table gets a *prime* set count: the scheduler's page
+    bases stride by 131072, which aliases into a handful of sets of the
+    default power-of-two table and would evict most hot pages before
+    the probe (the index pathology hot_pages.page_to_dram documents).
+    """
+    from repro.serving.hot_pages import HotPageConfig
+    from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+    from repro.serving.study import admission_hot_rate
+
+    window = HotPageConfig(n_entries=1018, caching_ms=0.05)  # 509 sets
+
+    def drive(charge_aware: bool) -> Scheduler:
+        s = Scheduler(SchedulerConfig(max_batch=4, charge_aware=charge_aware,
+                                      hot=window))
+        # cold half: prefilled long before any slot frees (decayed)
+        for rid in range(8):
+            s.submit(Request(rid=rid, prompt_len=4096, max_new=12))
+        s.now += 50_000  # > the 0.05 ms window: cold charge gone
+        # hot half: prefilled just now
+        for rid in range(8, 16):
+            s.submit(Request(rid=rid, prompt_len=4096, max_new=4))
+        s.run(80)
+        assert s.stats["retired"] == 16
+        return s
+
+    fifo, aware = drive(False), drive(True)
+    # both policies probe the same first-decode population
+    assert fifo.stats["admit_probes"] == aware.stats["admit_probes"] > 0
+    rf, ra = admission_hot_rate(fifo), admission_hot_rate(aware)
+    # non-degeneracy: charge-aware admission must capture a real share
+    # of the hot half while it is still hot — a wide, explicit margin
+    # over FIFO (which reaches the hot requests only after its cold
+    # backlog, well past the window)
+    assert ra >= 0.2, f"charge-aware admission lost the hot half (ra={ra})"
+    assert ra - rf >= 0.15, f"degenerate policy study: ra={ra}, rf={rf}"
+    assert 0.0 <= rf < ra <= 1.0
+
+
 # ----------------------------------------------------------------- sharding
 
 def test_sharding_rules_divisibility():
