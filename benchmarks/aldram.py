@@ -23,8 +23,7 @@ import os
 import numpy as np
 
 from benchmarks import common as C
-from repro.core import TEMPERATURE_BINS_C, weighted_speedup
-from repro.core import simulator as sim_mod
+from repro.core import TEMPERATURE_BINS_C
 
 ALDRAM_JSON = os.environ.get("REPRO_BENCH_ALDRAM_JSON", "BENCH_aldram.json")
 
@@ -40,13 +39,10 @@ def aldram_grid():
     canonicalized away), so the dense labeled grid launches only the
     behaviourally distinct points — still in one compilation.
     """
-    before = sim_mod._run_grid._cache_size()
-    res = C.experiment_mixes(C.random_mixes(2, 8),
-                             axes={"temperature": list(TEMPS),
-                                   "geometry": list(GEOMS),
-                                   "mechanism": list(MECHS)})
-    compiles = sim_mod._run_grid._cache_size() - before
-    return res, compiles
+    return C.compile_counted(
+        C.experiment_mixes, C.random_mixes(2, 8),
+        axes={"temperature": list(TEMPS), "geometry": list(GEOMS),
+              "mechanism": list(MECHS)})
 
 
 def per_bank_spread(res, temp: float, geometry: str = "ddr3_2ch") -> dict:
@@ -70,16 +66,10 @@ def run() -> list[str]:
         f"the temperature x geometry x mechanism grid must ride one "
         f"compilation, got {compiles}")
 
-    speedup = {}
-    for t in TEMPS:
-        by_geom = {}
-        for g in GEOMS:
-            row = res.sel(temperature=t, geometry=g)
-            sp = row.pairwise(
-                "mechanism", "base",
-                lambda b, s: weighted_speedup(b["core_end"], s["core_end"]))
-            by_geom[g] = {m: float(np.mean(v)) for m, v in sp.items()}
-        speedup[f"{int(t)}C"] = by_geom
+    speedup = {
+        f"{int(t)}C": {g: C.mech_speedups(res.sel(temperature=t, geometry=g))
+                       for g in GEOMS}
+        for t in TEMPS}
 
     doc = {
         "speedup_by_temperature": speedup,

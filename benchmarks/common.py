@@ -87,6 +87,47 @@ def sim_mix(names: list[str], kind: str, seed: int = 3, **mech_kw) -> dict:
     return simulate(batch, sim_cfg(kind, len(names), **mech_kw))
 
 
+def compile_counted(fn, *args, **kw):
+    """Run ``fn`` and count the fresh XLA compilations it triggered
+    across every grid engine (trace-driven batched/grid and the
+    synthetic streamed engine).  The shared harness behind every
+    benchmark's "this whole study rides ONE compilation" assertion."""
+    from repro.core import simulator as sim_mod
+    engines = (sim_mod._run_grid, sim_mod._run_batched,
+               sim_mod._run_synth_batched)
+    before = [e._cache_size() for e in engines]
+    out = fn(*args, **kw)
+    compiles = sum(e._cache_size() - b
+                   for e, b in zip(engines, before))
+    return out, compiles
+
+
+def mech_speedups(res: Results, base: str = "base") -> dict:
+    """Mean weighted speedup per mechanism label against ``base``,
+    averaged over every other dim of ``res`` (the per-benchmark
+    ``pairwise`` boilerplate, shared)."""
+    sp = res.pairwise(
+        "mechanism", base,
+        lambda b, s: weighted_speedup(b["core_end"], s["core_end"]))
+    return {m: float(np.mean(v)) for m, v in sp.items()}
+
+
+def experiment_synth(axes: dict, n_cores: int = 8, n_req: int | None = None,
+                     seed: int = 3, **kw) -> Results:
+    """A synthetic (on-device generated) evaluation matrix through the
+    Experiment API: ``Experiment(traces=None)`` over a workload axis —
+    no host trace is materialized or transferred (DESIGN.md §10).  The
+    base config sizes the streams (``n_req`` defaults to the bench's
+    multicore sizing) and sets the matching row policy."""
+    from repro.core import WorkloadSpec
+    import dataclasses
+    spec = WorkloadSpec(names=("milc_like",) * n_cores,
+                        n_req=n_req if n_req is not None else N_REQ_8C,
+                        seed=seed)
+    base = dataclasses.replace(sim_cfg("base", n_cores), workload=spec)
+    return Experiment(traces=None, axes=axes, base=base, **kw).run()
+
+
 def experiment_singles(names: list[str], axes: dict, seed: int = 3,
                        **kw) -> Results:
     """The whole (workload × axes) evaluation matrix through the

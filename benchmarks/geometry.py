@@ -19,11 +19,7 @@ from __future__ import annotations
 import json
 import os
 
-import numpy as np
-
 from benchmarks import common as C
-from repro.core import weighted_speedup
-from repro.core import simulator as sim_mod
 
 GEOMETRY_JSON = os.environ.get("REPRO_BENCH_GEOMETRY_JSON",
                                "BENCH_geometry.json")
@@ -35,25 +31,16 @@ MECHS = ("base", "chargecache", "nuat", "lldram")
 
 def geometry_grid():
     """(geometry × mechanism) over two 8-core mixes, one compile."""
-    before = sim_mod._run_grid._cache_size()
-    res = C.experiment_mixes(C.random_mixes(2, 8),
-                             axes={"geometry": list(GEOMS),
-                                   "mechanism": list(MECHS)})
-    compiles = sim_mod._run_grid._cache_size() - before
-    return res, compiles
+    return C.compile_counted(
+        C.experiment_mixes, C.random_mixes(2, 8),
+        axes={"geometry": list(GEOMS), "mechanism": list(MECHS)})
 
 
 def run() -> list[str]:
     (res, compiles), us = C.timed(geometry_grid)
 
     # per-geometry ChargeCache weighted speedup, averaged over the mixes
-    speedup = {}
-    for g in GEOMS:
-        row = res.sel(geometry=g)
-        sp = row.pairwise(
-            "mechanism", "base",
-            lambda b, s: weighted_speedup(b["core_end"], s["core_end"]))
-        speedup[g] = {m: float(np.mean(v)) for m, v in sp.items()}
+    speedup = {g: C.mech_speedups(res.sel(geometry=g)) for g in GEOMS}
 
     doc = {
         "speedup_by_geometry": speedup,

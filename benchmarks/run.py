@@ -46,7 +46,7 @@ def main() -> None:
     from benchmarks import (aldram, capacity, charge_model_bench, duration,
                             energy, geometry, kernels_bench, rltl,
                             roofline_bench, serving_trace, speedup,
-                            sweep_bench)
+                            sweep_bench, workloads)
     mods = [
         ("charge_model", charge_model_bench),
         ("rltl", rltl),
@@ -57,6 +57,7 @@ def main() -> None:
         ("duration", duration),
         ("geometry", geometry),
         ("aldram", aldram),
+        ("workloads", workloads),
         ("serving", serving_trace),
         ("kernels", kernels_bench),
         ("roofline", roofline_bench),

@@ -154,14 +154,97 @@ def fold_address(geom: GeomParams, bank, row):
     increasing contention — exactly the channel-sensitivity comparison of
     the thesis (Table 5.1 variants).
 
-    Known approximation for *non-identity* folds: the closed-row policy's
-    queue-hit lookahead (``next_same``) is precomputed host-side over the
-    unfolded addresses, so the controller hint ignores cross-bank fold
-    collisions — a conservative hint, second-order next to the contention
-    shift itself (DESIGN.md §8; exact alternative: regenerate the trace
-    per geometry, the ROADMAP "geometry-aware workload generation" item).
+    The closed-row policy's queue-hit lookahead (``next_same``) is
+    recomputed *post-fold* on device (``simulator._next_same_folded``),
+    so cross-bank fold collisions are reflected in the controller hint —
+    exact for identity and non-identity folds alike (DESIGN.md §8, §10;
+    the pre-PR-5 host precompute was stale under non-identity folds).
     """
     return jnp.mod(bank, geom.banks_total), jnp.mod(row, geom.n_rows)
+
+
+# --------------------------------------------------------------------------
+# Channel interleaving (DESIGN.md §10.2): how the on-device workload
+# generator composes a logical (bank, row) pair into a physical global
+# bank id — i.e. which *channel* owns a request.  Host-materialized
+# traces address global banks directly (the "bank" identity policy);
+# the synthetic-generation path makes the policy a traced experiment
+# axis (``register_axis("interleave")``) in the spirit of the
+# parallelism/interleaving characterization of Chang's thesis
+# (arXiv:1712.08304).
+# --------------------------------------------------------------------------
+
+#: registered interleave policies, index = the traced ``kind_id``
+INTERLEAVE_KINDS = ("bank", "row", "block", "xor")
+
+
+@dataclasses.dataclass(frozen=True)
+class InterleaveConfig:
+    """Host-side (hashable) channel-interleave policy selection.
+
+    * ``bank`` — identity: the logical bank id carries the channel bits
+      (``channel = lb // banks_per_channel``), exactly how materialized
+      traces address banks.  The parity baseline.
+    * ``row`` — fine-grained: consecutive rows round-robin the channels
+      (``channel = row mod n_channels``); streaming spreads across
+      channels, hot rows pin to one.
+    * ``block`` — coarse-grained: ``block_rows``-row blocks stay
+      channel-contiguous (``channel = (row // block_rows) mod n_ch``);
+      locality stays within a channel, conflicts concentrate.
+    * ``xor`` — permutation-based skew (``channel = (row XOR lb) mod
+      n_ch``): the classic conflict-dispersing XOR map.
+    """
+    kind: str = "bank"
+    block_rows: int = 32
+
+    def __post_init__(self):
+        assert self.kind in INTERLEAVE_KINDS, (
+            f"unknown interleave kind {self.kind!r}; "
+            f"known: {INTERLEAVE_KINDS}")
+        assert self.block_rows >= 1
+
+
+class InterleaveParams(NamedTuple):
+    """Traced (vmappable) interleave policy: the kind as data, so an
+    interleave sweep rides the same single compilation as every other
+    axis (the same split as ``GeomParams``)."""
+    kind_id: jnp.ndarray     # int32 index into INTERLEAVE_KINDS
+    block_rows: jnp.ndarray  # int32
+
+
+def interleave_params(cfg: InterleaveConfig) -> InterleaveParams:
+    """The traced-params view of a concrete ``InterleaveConfig``."""
+    return InterleaveParams(
+        kind_id=jnp.int32(INTERLEAVE_KINDS.index(cfg.kind)),
+        block_rows=jnp.int32(cfg.block_rows),
+    )
+
+
+def compose_address(geom: GeomParams, il: InterleaveParams, lb, row):
+    """Compose a logical (bank, row) into a physical global bank id.
+
+    ``lb`` is a *logical* bank in ``[0, banks_total)`` (the generator's
+    conflict-target choice); the interleave policy decides only which
+    channel serves it.  All four policies are evaluated data-driven and
+    selected by the traced ``kind_id``, so mixed-policy grids share one
+    compilation.  For ``kind_id == 0`` ("bank") the map is the identity
+    ``lb`` — bitwise the materialized-trace addressing (tested).  With
+    one active channel every policy degenerates to the identity (all
+    channel terms are mod-1 zero), which the experiment runner's dedup
+    exploits.
+    """
+    lb = jnp.asarray(lb, jnp.int32)
+    row = jnp.asarray(row, jnp.int32)
+    bpc = geom.banks_per_channel
+    nch = geom.n_channels
+    ch_home = lb // bpc
+    ch_row = jnp.mod(row, nch)
+    ch_blk = jnp.mod(row // jnp.maximum(il.block_rows, 1), nch)
+    ch_xor = jnp.mod(row ^ lb, nch)
+    ch = jnp.where(il.kind_id == 1, ch_row,
+                   jnp.where(il.kind_id == 2, ch_blk,
+                             jnp.where(il.kind_id == 3, ch_xor, ch_home)))
+    return ch * bpc + jnp.mod(lb, bpc)
 
 
 def time_since_refresh(geom, timing, row, t):

@@ -55,12 +55,14 @@ from repro.core import aldram as aldram_lib
 from repro.core import hcrac as hcrac_lib
 from repro.core import dram as dram_lib
 from repro.core.dram import (DRAMConfig, DDR3_SYSTEM, DRAMEnvelope,
-                             GeomParams, NO_ROW, envelope_of, fold_address,
-                             geom_params, refresh_adjust, time_since_refresh)
+                             GeomParams, InterleaveConfig, NO_ROW,
+                             envelope_of, fold_address, geom_params,
+                             interleave_params, refresh_adjust,
+                             time_since_refresh)
 from repro.core import timing as timing_lib
 from repro.core.timing import (TimingParams, TimingVec, DDR3_1600,
                                ms_to_cycles)
-from repro.core.traces import TraceBatch
+from repro.core.traces import TraceBatch, WorkloadSpec
 from repro.core import mechanisms as registry
 from repro.core.mechanisms import default_nuat_bins  # noqa: F401 (re-export)
 
@@ -101,6 +103,14 @@ class SimConfig:
     policy: str = "open"      # "open" (1-core) | "closed" (8-core), Table 5.1
     mshr: int = 8
     warmup_frac: float = 0.05
+    #: synthetic-workload selection for the streamed-generation path
+    #: (``simulate_synth`` / ``sweep_synth``, DESIGN.md §10); ``None``
+    #: means trace-driven (a ``TraceBatch`` is supplied by the caller)
+    workload: WorkloadSpec | None = None
+    #: channel-interleave policy for on-device address composition —
+    #: only consumed when ``workload`` is set (host traces address
+    #: global banks directly, the "bank" identity policy)
+    interleave: InterleaveConfig = InterleaveConfig()
 
     def __post_init__(self):
         assert self.policy in ("open", "closed")
@@ -475,9 +485,48 @@ def _make_step(shape: SimShape, p: MechParams, trace: dict, warmup_steps,
     return step
 
 
+def _next_same_folded(nb: int, bank, row, length):
+    """Closed-row queue-hit lookahead, recomputed on device over *folded*
+    addresses: ``out[c, i]`` is True iff core ``c``'s next request to the
+    same (folded) bank targets the same (folded) row.
+
+    This is the exact per-geometry lookahead (DESIGN.md §8, §10.2): the
+    pre-PR-5 host precompute ran over the unfolded stream, so under a
+    non-identity geometry fold the hint ignored cross-bank collisions
+    (the DESIGN §8 caveat, now closed — regression in
+    tests/test_geometry.py).  A reverse scan with one ``[nb]`` last-row
+    register file per core; ``nb`` is the static envelope bank count, so
+    the carry is tiny (the §2.1 perf rule: small carry, masked writes).
+    Entries at or past ``length`` neither match nor update — identical
+    to the host ``traces._next_same`` over the unpadded stream, which is
+    the identity-fold parity case (bitwise, tested).
+    """
+    L = bank.shape[-1]
+    idx = jnp.arange(L, dtype=jnp.int32)
+
+    def per_core(bk, rw, ln):
+        def rstep(last_row, x):
+            b, r, live = x
+            out = live & (last_row[b] == r)
+            new = last_row.at[b].set(jnp.where(live, r, last_row[b]))
+            return new, out
+        init = jnp.full((nb,), NO_ROW, jnp.int32)
+        _, out = jax.lax.scan(rstep, init, (bk, rw, idx < ln),
+                              reverse=True)
+        return out
+
+    return jax.vmap(per_core)(bank, row, length)
+
+
 def _run_impl(shape: SimShape, params: MechParams, trace: dict,
               warmup_steps, n_steps: int, collect_events: bool = True):
     n_cores, L = trace["gap"].shape
+    # queue-hit lookahead over the *folded* stream — exact for identity
+    # and non-identity geometry folds alike (see _next_same_folded)
+    fb, fr = fold_address(params.geom, trace["bank"], trace["row"])
+    trace = dict(trace)
+    trace["next_same"] = _next_same_folded(
+        shape.envelope.max_banks_total, fb, fr, trace["length"])
     st = _init_state(shape, n_cores, L)
     step = _make_step(shape, params, trace, warmup_steps, collect_events)
     st, events = jax.lax.scan(step, st, jnp.arange(n_steps, dtype=jnp.int32))
@@ -571,20 +620,26 @@ def _rltl_post_pass(events: Events):
 
 
 def _device_trace(batch: TraceBatch) -> dict:
+    # note: the host-precomputed ``batch.next_same`` is NOT shipped —
+    # the engine recomputes the lookahead post-fold (_next_same_folded),
+    # which is bitwise-identical for identity folds and *correct* (not
+    # merely stale-consistent) for non-identity geometry folds
     return {
         "gap": jnp.asarray(batch.gap, jnp.int32),
         "bank": jnp.asarray(batch.bank, jnp.int32),
         "row": jnp.asarray(batch.row, jnp.int32),
         "is_write": jnp.asarray(batch.is_write),
         "dep": jnp.asarray(batch.dep),
-        "next_same": jnp.asarray(batch.next_same),
         "length": jnp.asarray(batch.length, jnp.int32),
     }
 
 
 def _finalize(raw_stats: dict, core_end, events: Events | None,
-              batch: TraceBatch, cfg: SimConfig | None = None) -> dict:
-    """Host-side post-processing shared by ``simulate`` and ``sweep``."""
+              lengths: np.ndarray, cfg: SimConfig | None = None) -> dict:
+    """Host-side post-processing shared by ``simulate``/``sweep`` (which
+    pass the batch's per-core lengths) and the streamed-generation path
+    (which knows them from the ``WorkloadSpec`` — no ``TraceBatch``
+    exists there)."""
     stats = {k: np.asarray(v) for k, v in raw_stats.items()}
     if events is not None:
         hist, rltl_total = _rltl_post_pass(events)
@@ -594,8 +649,8 @@ def _finalize(raw_stats: dict, core_end, events: Events | None,
     stats["rltl_total"] = rltl_total
     stats["core_end"] = np.asarray(core_end)
     stats["total_cycles"] = int(stats["core_end"].max())
-    stats["n_cores"] = int(batch.length.shape[0])
-    stats["lengths"] = np.asarray(batch.length)
+    stats["n_cores"] = int(np.asarray(lengths).shape[0])
+    stats["lengths"] = np.asarray(lengths)
     if cfg is not None:
         # active geometry of this point (geometry-aware consumers:
         # energy_nj, the geometry benchmark's labels)
@@ -628,7 +683,7 @@ def simulate(batch: TraceBatch, cfg: SimConfig = SimConfig()) -> dict:
     warmup = jnp.int32(int(cfg.warmup_frac * n_steps))
     raw_stats, core_end, events = _run(sim_shape(cfg), mech_params(cfg),
                                        trace, warmup, n_steps)
-    return _finalize(raw_stats, core_end, events, batch, cfg)
+    return _finalize(raw_stats, core_end, events, batch.length, cfg)
 
 
 def _shard_grid(stacked: MechParams, n_grid: int):
@@ -733,7 +788,7 @@ def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
     return [
         _finalize({k: v[g] for k, v in stats_np.items()}, core_np[g],
                   Events(*(e[g] for e in events_np))
-                  if events_np is not None else None, batch, grid[g])
+                  if events_np is not None else None, batch.length, grid[g])
         for g in range(n_grid)
     ]
 
@@ -790,9 +845,129 @@ def sweep_traces(batches: Sequence[TraceBatch], grid: Sequence[SimConfig],
             ev = (Events(*(e[b, g] for e in events_np))
                   if events_np is not None else None)
             row.append(_finalize({k: v[b, g] for k, v in stats_np.items()},
-                                 core_np[b, g], ev, batches[b], grid[g]))
+                                 core_np[b, g], ev, batches[b].length,
+                                 grid[g]))
         out.append(row)
     return out
+
+
+# --------------------------------------------------------------------------
+# Streamed generation: the synthetic-workload path (DESIGN.md §10).
+# The workload itself is traced data (WorkloadParams / InterleaveParams
+# stacked along the grid axis next to MechParams), the stream is
+# generated on device inside the same jit as the scan, and no host
+# trace is ever materialized or transferred.  The generator lives in
+# ``repro.workloads`` (which imports this core layer); the entry points
+# import it lazily at call time, so the module import graph stays
+# acyclic while the engine keeps both paths side by side.
+# --------------------------------------------------------------------------
+
+def _run_synth_impl(shape: SimShape, n_cores: int, max_len: int,
+                    p: MechParams, w, il, warmup,
+                    n_steps: int, collect_events: bool):
+    from repro.workloads.generator import generate
+    trace = generate(n_cores, max_len, w, p.geom, il)
+    return _run_impl(shape, p, trace, warmup, n_steps, collect_events)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8))
+def _run_synth_batched(shape: SimShape, n_cores: int, max_len: int,
+                       params: MechParams, wparams, ilparams,
+                       warmups, n_steps: int,
+                       collect_events: bool = True):
+    """The synthetic grid engine: generation + scan vmapped together —
+    ``params`` / ``wparams`` / ``ilparams`` leaves and the per-point
+    ``warmups`` carry a leading [grid] axis and one compilation serves
+    every (workload, interleave, geometry, mechanism) point."""
+    return jax.vmap(
+        lambda p, w, il, wu: _run_synth_impl(shape, n_cores, max_len, p,
+                                             w, il, wu, n_steps,
+                                             collect_events))(
+        params, wparams, ilparams, warmups)
+
+
+def sweep_synth(grid: Sequence[SimConfig], rltl: bool = True,
+                shape_grid: Sequence[SimConfig] | None = None
+                ) -> list[dict]:
+    """Evaluate a *synthetic* config grid — every ``cfg.workload`` set —
+    with per-point on-device stream generation (DESIGN.md §10).
+
+    The mechanics mirror ``sweep()``: one static ``SimShape`` (padded
+    over ``shape_grid``), stacked traced params, one vmapped jitted
+    launch sharded across devices.  On top of ``MechParams``, each grid
+    point stacks its ``WorkloadParams`` ([grid, C] leaves) and
+    ``InterleaveParams``, and the scan consumes a stream generated *for*
+    its active geometry through the interleave layer — ``fold_address``
+    is the identity and the recomputed ``next_same`` lookahead is exact
+    by construction.  Results are bitwise-identical to simulating the
+    host-materialized view of the same stream
+    (``repro.workloads.materialize``; tests/test_workloads.py).
+
+    All specs must share the core count; per-core array length pads to
+    the longest (traffic-scaled) spec across ``shape_grid``, padded
+    steps being no-ops as usual.
+    """
+    from repro.workloads.profiles import max_len_of, spec_params
+    grid = list(grid)
+    assert grid, "empty synthetic sweep grid"
+    shape_grid_l = (list(shape_grid) if shape_grid is not None
+                    else list(grid))
+    for cfg in grid + shape_grid_l:
+        assert cfg.workload is not None and cfg.workload.names, (
+            "sweep_synth needs cfg.workload set on every grid point")
+    c0 = grid[0]
+    n_cores = c0.workload.n_cores
+    for cfg in grid + shape_grid_l:
+        assert cfg.workload.n_cores == n_cores, (
+            "synthetic grids must share the core count")
+    shape, stacked = _grid_shape_and_params(grid, shape_grid)
+
+    max_len = max_len_of([cfg.workload for cfg in grid + shape_grid_l])
+    n_steps = n_cores * max_len
+    assert n_steps < 2**24, "workload too long for the int32 cycle horizon"
+
+    wstack = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[spec_params(cfg.workload) for cfg in grid])
+    ilstack = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[interleave_params(cfg.interleave) for cfg in grid])
+    # per-point warm-up, computed host-side from the spec's known
+    # request counts with the SAME ``int(frac * total)`` float
+    # arithmetic the materialized path uses — bitwise parity for any
+    # warmup_frac (the ``sweep_traces`` warmups pattern)
+    warmups = jnp.asarray(
+        [int(cfg.warmup_frac * int(cfg.workload.lengths().sum()))
+         for cfg in grid], jnp.int32)
+
+    n_grid = len(grid)
+    (stacked, wstack, ilstack, warmups), _ = _shard_grid(
+        (stacked, wstack, ilstack, warmups), n_grid)
+    raw_stats, core_end, events = _run_synth_batched(
+        shape, n_cores, max_len, stacked, wstack, ilstack, warmups,
+        n_steps, rltl)
+
+    stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}
+    core_np = np.asarray(core_end)
+    events_np = (Events(*(np.asarray(e) for e in events))
+                 if events is not None else None)
+    return [
+        _finalize({k: v[g] for k, v in stats_np.items()}, core_np[g],
+                  Events(*(e[g] for e in events_np))
+                  if events_np is not None else None,
+                  grid[g].workload.lengths(), grid[g])
+        for g in range(n_grid)
+    ]
+
+
+def simulate_synth(cfg: SimConfig) -> dict:
+    """One synthetic grid point, streamed end to end (``cfg.workload``
+    selects the profiles; ``cfg.interleave`` the channel map).  The
+    single-point view of ``sweep_synth`` — bitwise-identical to
+    ``simulate(materialize(cfg.workload, cfg.dram, cfg.interleave),
+    cfg)``, the materialized-trace path."""
+    assert cfg.workload is not None, "simulate_synth needs cfg.workload"
+    return sweep_synth([cfg], rltl=True)[0]
 
 
 def weighted_speedup(core_end_base: np.ndarray, core_end_mech: np.ndarray,

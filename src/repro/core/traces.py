@@ -22,6 +22,13 @@ see benchmarks/rltl.py and EXPERIMENTS.md §Paper-validation.
 
 Traces are generated with numpy (data preparation, not jitted) and are
 fully deterministic given the seed.
+
+This module is also the **numpy reference path** for the on-device
+workload generator (``repro.workloads``, DESIGN.md §10): the profile
+table below is shared by both paths, and the traced generator's
+statistics are validated against ``generate_trace`` per profile within
+documented tolerances (tests/test_workloads.py).  ``WorkloadSpec`` is
+the host-side selection the synthetic path sweeps.
 """
 
 from __future__ import annotations
@@ -123,6 +130,42 @@ WORKLOADS = [dataclasses.replace(w,
              for w in WORKLOADS]
 
 WORKLOAD_BY_NAME = {w.name: w for w in WORKLOADS}
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkloadSpec:
+    """Host-side (hashable) selection of a *synthetic* workload: the
+    profile name per core plus the stream sizing.  This is the value
+    carried by ``SimConfig.workload`` for the on-device generation path
+    (``repro.workloads``, DESIGN.md §10) and swept by
+    ``register_axis("workload")`` — the traced-pytree view is
+    ``repro.workloads.profiles.spec_params``.  It lives here (next to
+    the shared profile table) so ``repro.core`` never imports upward.
+    """
+    names: tuple[str, ...] = ()
+    n_req: int = 20_000
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(self, "names", tuple(self.names))
+        for n in self.names:
+            assert n in WORKLOAD_BY_NAME, (
+                f"unknown workload profile {n!r}")
+        assert self.n_req >= 8
+
+    @property
+    def n_cores(self) -> int:
+        return len(self.names)
+
+    def lengths(self) -> np.ndarray:
+        """Per-core request counts (the reference ``traffic`` scaling)."""
+        return np.array(
+            [max(8, int(self.n_req * WORKLOAD_BY_NAME[n].traffic))
+             for n in self.names], np.int32)
+
+    @property
+    def max_len(self) -> int:
+        return int(self.lengths().max())
 
 
 class Trace(NamedTuple):

@@ -10,7 +10,9 @@ Layers (DESIGN.md §7):
 - ``spec``      — ``Experiment(traces=…, axes=…, metrics=…)``: named
   axes expand into a ``SimConfig`` grid (extensible ``register_axis``).
 - ``runner``    — grid dedup, per-device-memory auto-chunking into
-  ``sweep()`` / ``sweep_traces()`` launches sharing one compile.
+  ``sweep()`` / ``sweep_traces()`` launches sharing one compile — or
+  ``sweep_synth()`` launches for ``Experiment(traces=None)``, the
+  on-device workload-generation mode (DESIGN.md §10).
 - ``results``   — ``Results`` with labeled dims/coords: ``.sel()``,
   ``.to_table()``, ``.to_json()`` / ``from_json()``.
 

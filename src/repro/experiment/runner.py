@@ -15,8 +15,12 @@ Data flow (DESIGN.md §7.1):
 4. **Launch**: trace batches are grouped by core count (padded to the
    group's longest trace — behaviour-neutral, DESIGN.md §4) and each
    (group × chunk) goes through one ``sweep_traces()`` call — or plain
-   ``sweep()`` for a single unlabeled batch.  Chunk results stream back
-   through the optional ``progress`` callback as they complete.
+   ``sweep()`` for a single unlabeled batch.  A *synthetic* experiment
+   (``traces=None``: every point carries a ``WorkloadSpec``) launches
+   chunks through ``sweep_synth()`` instead — streams are generated on
+   device per grid point, no host trace exists (DESIGN.md §10).  Chunk
+   results stream back through the optional ``progress`` callback as
+   they complete.
 5. Cells assemble into a dense labeled ``Results``; per-trace extras
    (``trace_metrics``) merge into every cell of their trace row.
 
@@ -33,7 +37,8 @@ import os
 import jax
 import numpy as np
 
-from repro.core.simulator import SimConfig, sweep, sweep_traces
+from repro.core.dram import InterleaveConfig
+from repro.core.simulator import SimConfig, sweep, sweep_synth, sweep_traces
 from repro.core.traces import pad_batch_to
 from repro.experiment import registry
 from repro.experiment.results import Results
@@ -43,11 +48,22 @@ from repro.experiment.spec import Experiment
 DEFAULT_BUDGET_MB = 1024.0
 
 
-def _canonical(cfg: SimConfig) -> SimConfig:
-    return dataclasses.replace(cfg, mech=registry.canonical_mech(cfg.mech))
+def _canonical(cfg: SimConfig, synth: bool) -> SimConfig:
+    cfg = dataclasses.replace(cfg, mech=registry.canonical_mech(cfg.mech))
+    if not synth:
+        # the workload spec and interleave policy are only consumed by
+        # the streamed-generation engine: on a trace-driven experiment
+        # they are inert, so points differing only there dedup
+        cfg = dataclasses.replace(cfg, workload=None,
+                                  interleave=InterleaveConfig())
+    elif cfg.dram.n_channels == 1:
+        # with one active channel every interleave policy degenerates
+        # to the identity (dram.compose_address) — dedup the axis
+        cfg = dataclasses.replace(cfg, interleave=InterleaveConfig())
+    return cfg
 
 
-def _dedup(configs: list[SimConfig], enable: bool):
+def _dedup(configs: list[SimConfig], enable: bool, synth: bool):
     """Unique canonical configs + flat-index → unique-index map."""
     if not enable:
         return list(configs), list(range(len(configs)))
@@ -55,7 +71,7 @@ def _dedup(configs: list[SimConfig], enable: bool):
     where: dict = {}
     index_map = []
     for cfg in configs:
-        key = _canonical(cfg)
+        key = _canonical(cfg, synth)
         if key not in where:
             where[key] = len(unique)
             unique.append(key)
@@ -66,7 +82,7 @@ def _dedup(configs: list[SimConfig], enable: bool):
 def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
                     n_cores: int, mshr: int, n_traces: int,
                     rltl: bool, n_banks_total: int = 16,
-                    n_channels: int = 2) -> int:
+                    n_channels: int = 2, synth: bool = False) -> int:
     """Rough per-grid-point device-memory estimate for one launch.
 
     Dominant terms: the per-point HCRAC state (three int32 arrays, double
@@ -75,15 +91,25 @@ def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
     open-row, three ready times, the two last-PRE registers, the two
     per-bank stat accumulators — plus two bus arrays; a 1024-bank
     envelope point carries ~66 KB where the old constant assumed Table
-    5.1's 16 banks) and — when events are collected for RLTL — the
-    per-step event stream (7 int32 scan outputs).  The trace itself is
-    shared across the grid axis and excluded.  With ``sweep_traces`` the
-    whole thing multiplies by the batch axis.
+    5.1's 16 banks), the per-point *folded* address copies + recomputed
+    ``next_same`` lookahead (two int32 + one bool stream per point —
+    the post-fold recompute, DESIGN.md §8), and — when events are
+    collected for RLTL — the per-step event stream (7 int32 scan
+    outputs).  The shared host trace itself is excluded; a *synthetic*
+    point (``synth=True``, DESIGN.md §10) instead owns its whole
+    generated stream (no host trace exists), adding the request arrays
+    and generation temporaries.  With ``sweep_traces`` the whole thing
+    multiplies by the batch axis.
     """
     per = 4096  # carry scalars, stats, issue-model state, slack
     per += n_sets_max * n_ways * 3 * 4 * 2
     per += (8 * n_banks_total + 2 * n_channels) * 4 * 2
     per += n_cores * (mshr + 8) * 4
+    per += 9 * n_steps  # folded (bank, row) + next_same, per point
+    if synth:
+        # generated stream + the scan's materialized candidate-draw xs
+        # (three f32 + five int32 per step) + masked output copies
+        per += 56 * n_steps
     if rltl:
         per += 7 * 4 * n_steps
     return per * max(1, n_traces)
@@ -91,6 +117,12 @@ def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
 
 def _auto_chunk(unique: list[SimConfig], groups, rltl: bool,
                 budget_mb: float | None) -> int:
+    """Largest device-aligned chunk fitting the per-device budget.
+
+    ``groups`` holds the trace batches (trace-driven mode); when it is
+    empty the grid is synthetic and the stream dimensions come from the
+    configs' ``WorkloadSpec``s instead (``bytes_per_point(synth=True)``
+    — each point owns its generated stream)."""
     budget_mb = (budget_mb if budget_mb is not None else
                  float(os.environ.get("REPRO_EXP_BUDGET_MB",
                                       DEFAULT_BUDGET_MB)))
@@ -108,6 +140,15 @@ def _auto_chunk(unique: list[SimConfig], groups, rltl: bool,
             n_ways=n_ways, n_cores=n_cores, mshr=unique[0].mshr,
             n_traces=len(batches), rltl=rltl,
             n_banks_total=n_banks_max, n_channels=n_ch_max))
+    if not groups:  # synthetic grid: no host traces, per-point streams
+        from repro.workloads.profiles import max_len_of
+        n_cores = unique[0].workload.n_cores
+        max_len = max_len_of([c.workload for c in unique])
+        worst = bytes_per_point(
+            n_steps=n_cores * max_len, n_sets_max=n_sets_max,
+            n_ways=n_ways, n_cores=n_cores, mshr=unique[0].mshr,
+            n_traces=1, rltl=rltl, n_banks_total=n_banks_max,
+            n_channels=n_ch_max, synth=True)
     ndev = max(1, len(jax.devices()))
     budget = budget_mb * 2**20 * ndev
     chunk = int(max(1, budget // worst))
@@ -121,12 +162,31 @@ def run_experiment(exp: Experiment, progress=None) -> Results:
     cfg_dims, cfg_coords, configs = exp.expand()
     if not configs:
         configs = [exp.base]
-    unique, index_map = _dedup(configs, exp.dedup)
+    synth = exp.traces is None
+    unique, index_map = _dedup(configs, exp.dedup, synth)
+
+    if synth:
+        for cfg in unique:
+            assert cfg.workload is not None and cfg.workload.names, (
+                "Experiment(traces=None) is the synthetic mode: every "
+                "grid point needs a WorkloadSpec (add a 'workload' axis "
+                "or set base.workload)")
+        # fail up front (not mid-launch) on mixed core counts: the
+        # streamed engine shares one [C, L] stream shape per grid —
+        # unlike the trace-driven path, which groups batches by C
+        cores = {cfg.workload.n_cores for cfg in unique}
+        assert len(cores) == 1, (
+            f"a synthetic grid must share one core count, got {sorted(cores)}: "
+            f"split the experiment per core count (the workload axis mixes "
+            f"single-core names with multi-core mixes)")
+        # one pseudo trace row so chunk fan-out/assembly is shared below
+        trace_items = [(None, None)]
 
     # group traces by core count; pad within a group to the longest trace
     groups: dict[int, list] = {}
-    for pos, (label, batch) in enumerate(trace_items):
-        groups.setdefault(batch.gap.shape[0], []).append((pos, batch))
+    if not synth:
+        for pos, (label, batch) in enumerate(trace_items):
+            groups.setdefault(batch.gap.shape[0], []).append((pos, batch))
 
     chunk = exp.chunk_size or _auto_chunk(unique, groups, exp.rltl,
                                           exp.memory_budget_mb)
@@ -140,6 +200,14 @@ def run_experiment(exp: Experiment, progress=None) -> Results:
     done = 0
     by_trace: list[list] = [[None] * len(unique) for _ in trace_items]
     single = not labeled and len(trace_items) == 1
+    if synth:
+        for ci, cfgs in enumerate(chunks):
+            row = sweep_synth(cfgs, rltl=exp.rltl, shape_grid=unique)
+            by_trace[0][ci * chunk:ci * chunk + n_valid[ci]] = \
+                row[:n_valid[ci]]
+            done += n_valid[ci]
+            if progress is not None:
+                progress(done, total)
     for batches in groups.values():
         max_len = max(b.gap.shape[1] for _, b in batches)
         padded = [pad_batch_to(b, max_len) for _, b in batches]
@@ -177,4 +245,5 @@ def run_experiment(exp: Experiment, progress=None) -> Results:
         meta={"n_points": len(configs) * len(trace_items),
               "n_configs": len(configs), "n_unique": len(unique),
               "chunk_size": chunk, "n_chunks": len(chunks),
-              "n_launches": len(chunks) * len(groups)})
+              # synth mode has no trace groups: one launch per chunk
+              "n_launches": len(chunks) * max(1, len(groups))})

@@ -24,9 +24,10 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Mapping, Sequence
 
-from repro.core.dram import DRAMConfig
+from repro.core.dram import DRAMConfig, InterleaveConfig
 from repro.core.simulator import SimConfig
 from repro.core.timing import lowered_for_duration, ms_to_cycles
+from repro.core.traces import WORKLOAD_BY_NAME, WorkloadSpec
 from repro.experiment.results import DEFAULT_METRICS, Results
 
 AXIS_BUILDERS: dict[str, Callable[[SimConfig, Any], SimConfig]] = {}
@@ -107,6 +108,42 @@ def _axis_temperature(cfg: SimConfig, temp_c) -> SimConfig:
         cfg, mech=dataclasses.replace(cfg.mech, aldram=ald))
 
 
+@register_axis("workload")
+def _axis_workload(cfg: SimConfig, value) -> SimConfig:
+    """Synthetic workload (DESIGN.md §10): a profile name (single core),
+    a *list* of names (multiprogrammed mix, one per core — prefer the
+    ``{label: [names]}`` mapping form so the coordinate label stays a
+    scalar; a bare 2-tuple would be read as the generic ``(label,
+    value)`` axis convention), or a full ``WorkloadSpec``.  Name values
+    inherit ``n_req``/``seed`` from the base config's spec (set
+    ``base.workload`` to size the streams).  The workload is generated
+    on device per grid point (``sweep_synth``); use
+    ``Experiment(traces=None, ...)`` so the runner takes the streamed
+    path."""
+    if isinstance(value, WorkloadSpec):
+        spec = value
+    else:
+        names = (value,) if isinstance(value, str) else tuple(value)
+        prev = cfg.workload
+        spec = WorkloadSpec(names=names,
+                            n_req=prev.n_req if prev is not None else 20_000,
+                            seed=prev.seed if prev is not None else 0)
+    return dataclasses.replace(cfg, workload=spec)
+
+
+@register_axis("interleave")
+def _axis_interleave(cfg: SimConfig, value) -> SimConfig:
+    """Channel-interleave policy for on-device address composition: an
+    ``INTERLEAVE_KINDS`` name or an ``InterleaveConfig``.  Traced end to
+    end (``InterleaveParams``), so an interleave sweep rides the same
+    compilation; trace-driven points (no workload) and single-channel
+    geometries dedup across this axis — the policy only matters where a
+    generated stream has channels to spread (DESIGN.md §10.2)."""
+    il = (value if isinstance(value, InterleaveConfig)
+          else InterleaveConfig(kind=value))
+    return dataclasses.replace(cfg, interleave=il)
+
+
 @register_axis("policy")
 def _axis_policy(cfg: SimConfig, policy: str) -> SimConfig:
     return dataclasses.replace(cfg, policy=policy)
@@ -135,8 +172,11 @@ class Experiment:
     """A declarative evaluation grid: traces × named config axes.
 
     - ``traces``: one ``TraceBatch``, a ``{label: batch}`` mapping (adds
-      a leading ``trace_dim`` to the Results), or a sequence (labeled by
-      index).
+      a leading ``trace_dim`` to the Results), a sequence (labeled by
+      index), or ``None`` — the *synthetic* mode: every grid point must
+      carry a ``WorkloadSpec`` (a ``workload`` axis or ``base.workload``)
+      and its stream is generated on device (``sweep_synth``,
+      DESIGN.md §10) — no host trace exists at any point.
     - ``axes``: ``{axis_name: values}`` expanded cartesian, in insertion
       order, through ``AXIS_BUILDERS`` on top of ``base``.
     - ``chunk_size`` / ``memory_budget_mb``: the runner splits the config
@@ -170,6 +210,23 @@ class Experiment:
             assert d in AXIS_BUILDERS, (
                 f"unknown axis {d!r}; registered: {tuple(AXIS_BUILDERS)}")
             assert items[d], f"empty axis {d!r}"
+        # ambiguity guard on the RAW axis values (before the generic
+        # (label, value) tuple normalization, which would make a
+        # homogeneous pair indistinguishable from a scalar): a bare
+        # tuple of profile names on the workload axis was almost
+        # certainly meant as a multi-core mix, but the tuple convention
+        # would silently run a single-core stream under a wrong label
+        if "workload" in dims and not isinstance(self.axes["workload"],
+                                                 Mapping):
+            for v in self.axes["workload"]:
+                assert not (isinstance(v, tuple) and v
+                            and all(isinstance(n, str)
+                                    and n in WORKLOAD_BY_NAME
+                                    for n in v)), (
+                    f"ambiguous workload axis value {v!r}: a tuple of "
+                    f"profile names reads as the generic (label, value) "
+                    f"pair; write mixes as lists or as "
+                    f"{{label: [names]}} mappings")
         configs = []
 
         def rec(cfg, rest):
@@ -185,8 +242,11 @@ class Experiment:
 
     def trace_items(self):
         """``(labeled, [(label, batch), ...])``; unlabeled single batches
-        get no trace dim in the Results."""
+        get no trace dim in the Results; ``traces=None`` (the synthetic
+        streamed-generation mode) yields no trace items at all."""
         t = self.traces
+        if t is None:  # synthetic: workloads are grid axes, not traces
+            return False, []
         if hasattr(t, "gap"):  # a single TraceBatch (NamedTuple, so check
             return False, [(None, t)]  # before the tuple branch)
         if isinstance(t, Mapping):

@@ -1,0 +1,23 @@
+"""On-device workload synthesis (DESIGN.md §10).
+
+The traced counterpart of ``repro.core.traces``: synthetic request
+streams generated *on device, per grid point* from a counter-based PRNG
+(``prng``), with workload statistics carried as a traced pytree
+(``profiles``) and addresses composed through the pluggable channel-
+interleave layer (``repro.core.dram``).  The streamed entry points
+(``simulate_synth`` / ``sweep_synth``) live in ``repro.core.simulator``
+alongside the materialized-trace path; the declarative front door is
+``register_axis("workload")`` / ``register_axis("interleave")`` plus
+``Experiment(traces=None, ...)``.
+"""
+
+from repro.core.traces import WorkloadSpec
+from repro.workloads import prng
+from repro.workloads.generator import generate, materialize
+from repro.workloads.profiles import (WorkloadParams, max_len_of,
+                                      profile_params, spec_params)
+
+__all__ = [
+    "WorkloadSpec", "WorkloadParams", "generate", "materialize",
+    "max_len_of", "profile_params", "spec_params", "prng",
+]

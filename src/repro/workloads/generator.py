@@ -1,0 +1,245 @@
+"""On-device synthetic request-stream generation (DESIGN.md §10.1).
+
+Reproduces the statistical model of ``repro.core.traces.generate_trace``
+— memory intensity, row-hit runs, Zipf hot-set reuse, hot-bank
+concentration, streaming, dependencies, read/write mix — as a JAX
+program over *traced* ``WorkloadParams`` / ``GeomParams`` /
+``InterleaveParams``, so a workload × interleave × geometry × mechanism
+grid generates every point's stream on device inside ONE compilation
+and no host trace is ever materialized or transferred.
+
+Model translation (numpy reference → counter-based traced form):
+
+* The reference's LRU reuse stack with Zipf *stack distances* becomes a
+  **recency ring + virtual popularity table**: each hot access picks a
+  rank from the Pareto inverse-CDF tail of the same Zipf exponent; rank
+  0 is the current row, ranks ``1..RECENT_RING`` resolve through a ring
+  of the most recent distinct rows (the move-to-front burst window that
+  drives short-interval reuse and HCRAC hits), and deeper ranks fall
+  back to a fixed virtual table whose entry ``j`` is re-derived on
+  demand from the counter-based PRNG (``hash(seed, core, lane, j)``).
+  Full move-to-front is inherently sequential O(hot_rows) state; this
+  truncation keeps an O(RECENT_RING) carry while matching the reference
+  within documented tolerances per profile (tests/test_workloads.py:
+  row-hit rate, HCRAC hit rate, RLTL curve points, cycle counts).
+* Hot banks are a strided arithmetic walk ``(b0 + k·stride) mod
+  banks_total`` with odd stride, giving the reference's *distinct*
+  hot-bank set for the table's small ``n_hot_banks`` without a choice-
+  without-replacement loop.
+* The per-core row slice is derived from the *traced* geometry
+  (``span = n_rows // n_cores``), so multiprogrammed cores slice
+  whatever geometry the grid point runs — the reference computes the
+  same slice host-side for its one generating geometry.
+* Addresses leave the generator as logical ``(lb, row)`` pairs and are
+  composed into physical banks by the interleave layer
+  (``dram.compose_address``) — generated *for* the active geometry, so
+  ``fold_address`` is the identity and the recomputed ``next_same``
+  lookahead is exact by construction (DESIGN.md §8, §10.2).
+
+The scan carry per core is ``(lb, row)`` plus the small recency ring:
+every random draw is a pure function of ``(seed, core, lane, step)``
+(``repro.workloads.prng``), all candidate draws are precomputed
+vectorized, and the scan only resolves the sequential branch structure
+(hit-run / stream / hot / random) and the ring updates.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dram as dram_lib
+from repro.core.dram import (DRAMConfig, DDR3_SYSTEM, GeomParams,
+                             InterleaveConfig, InterleaveParams,
+                             geom_params, interleave_params)
+from repro.core.traces import Trace, TraceBatch, WorkloadSpec, _next_same
+from repro.workloads import prng
+from repro.workloads.profiles import WorkloadParams, spec_params
+
+__all__ = ["generate", "materialize"]
+
+# PRNG lanes: one independent sub-stream per random quantity.
+(_L_HIT, _L_SEQ, _L_HOT, _L_PICK, _L_GAP, _L_WRITE, _L_DEP,
+ _L_RBANK, _L_RROW, _L_HOTBANK, _L_HOTROW, _L_B0, _L_STRIDE,
+ _L_PICK2) = prng.lanes(14)
+
+_MAX_GAP = jnp.int32(1 << 20)  # int32 cycle-horizon guard on the tail
+
+#: recency-ring depth: stack ranks 1..RECENT_RING resolve to the most
+#: recent distinct rows (the move-to-front burst window); deeper ranks
+#: fall back to the fixed-popularity virtual table
+RECENT_RING = 128
+
+
+def _umod(h, n):
+    """uint32 hash → int32 uniform in [0, n) for a traced positive n."""
+    return (h % jnp.maximum(n, 1).astype(jnp.uint32)).astype(jnp.int32)
+
+
+def _rank_pick(u, u_tail, w: WorkloadParams):
+    """Hot-set rank from one uniform: the Pareto inverse-CDF tail of the
+    profile's Zipf exponent (``stack_zipf > 0``), or the geometric
+    fallback (``stack_geo``) — mirroring the reference's two stack-
+    distance families.
+
+    Ranks past the table do NOT clip to the last entry: in the
+    reference's move-to-front stack the deepest ranks rotate through the
+    whole hot set (a clipped pick returns a different row every time),
+    so an overflowing rank here redraws *uniformly* over the table
+    (``u_tail``) — without this, low-exponent profiles (mcf/omnetpp,
+    Zipf ~1.08: ~45 % tail mass) would hammer one fixed row and inflate
+    the row-hit rate far above the reference."""
+    cap = jnp.maximum(w.hot_rows - 1, 0).astype(jnp.float32)
+    # Pareto tail: X = u^(-1/(a-1)) >= 1; rank = floor(X) - 1
+    a1 = jnp.maximum(w.stack_zipf - 1.0, 1e-3)
+    zipf = jnp.floor(jnp.exp(-jnp.log1p(-u) / a1)) - 1.0
+    geo = jnp.floor(jnp.log1p(-u) / jnp.log1p(-jnp.minimum(w.stack_geo,
+                                                           0.9999)))
+    j = jnp.maximum(jnp.where(w.stack_zipf > 0, zipf, geo), 0.0)
+    uni = jnp.floor(u_tail * w.hot_rows.astype(jnp.float32))
+    j = jnp.where(j > cap, uni, j)
+    return jnp.minimum(j, cap).astype(jnp.int32)
+
+
+def _gen_core(max_len: int, w: WorkloadParams, geom: GeomParams,
+              il: InterleaveParams):
+    """One core's stream: every WorkloadParams leaf a scalar array."""
+    xp = jnp
+    step = jnp.arange(max_len, dtype=jnp.int32)
+    key = (w.seed, w.core_idx)
+    u = lambda lane, *extra: prng.uniform(xp, *key, lane, *extra)
+    h = lambda lane, *extra: prng.hash_u32(xp, *key, lane, *extra)
+
+    # per-core row slice of the traced geometry (thesis §6.1 regions)
+    span = jnp.maximum(geom.n_rows // jnp.maximum(w.n_cores, 1), 1)
+    base = w.core_idx * span
+
+    # hot-bank walk: n_hot_banks distinct-by-construction banks
+    b0 = _umod(h(_L_B0), geom.banks_total)
+    stride = 1 + 2 * _umod(h(_L_STRIDE), jnp.maximum(geom.banks_total // 2,
+                                                     1))
+    hot_lb = lambda k: jnp.mod(b0 + k * stride, geom.banks_total)
+    nhb = jnp.maximum(w.n_hot_banks, 1)
+
+    # virtual hot table: entry j -> a fixed (bank, row) pair, re-derived
+    # on demand (no stored table — the counter-based PRNG contract)
+    def hot_entry(j):
+        lb = hot_lb(_umod(h(_L_HOTBANK, j), nhb))
+        row = base + _umod(h(_L_HOTROW, j), span)
+        return lb, row
+
+    # vectorized candidate draws for every step
+    j_pick = _rank_pick(u(_L_PICK, step), u(_L_PICK2, step), w)
+    lb_hot, row_hot = hot_entry(j_pick)
+    lb_rand = hot_lb(_umod(h(_L_RBANK, step), nhb))
+    row_rand = base + _umod(h(_L_RROW, step), span)
+    u_hit = u(_L_HIT, step)
+    u_seq = u(_L_SEQ, step)
+    u_hot = u(_L_HOT, step)
+
+    # intensity / mix (independent of the address walk)
+    p_gap = 1.0 / w.mean_gap
+    gap = 1 + jnp.floor(jnp.log1p(-u(_L_GAP, step))
+                        / jnp.log1p(-p_gap)).astype(jnp.int32)
+    gap = jnp.clip(gap, 1, _MAX_GAP)
+    is_write = u(_L_WRITE, step) < w.p_write
+    dep = u(_L_DEP, step) < w.p_dep
+
+    def walk(carry, x):
+        lb, row, ring_lb, ring_row, head = carry
+        uh, us, uo, jp, lbh, rwh, lbr, rwr = x
+        hit = uh < w.p_rowhit
+        seq = ~hit & (us < w.p_seq)
+        hot = ~hit & ~seq & (uo < w.p_hot)
+        row_seq = base + jnp.mod(row - base + 1, span)  # streaming advance
+        # the move-to-front stack's shallow ranks are *recency*, not
+        # popularity: rank 0 IS the current row (the last touched entry
+        # sits at the front) and ranks 1..RECENT_RING come from a ring
+        # of the most recent distinct rows — this reproduces the bursty
+        # few-row rotation that drives short-window (HCRAC) reuse, which
+        # a stationary popularity table cannot.  Ranks past the ring
+        # approximate as the fixed-popularity virtual table.
+        top = hot & (jp == 0)
+        recent = hot & (jp >= 1) & (jp <= RECENT_RING)
+        ridx = jnp.mod(head - (jp - 1), RECENT_RING)
+        new_lb = jnp.where(hit | seq | top, lb,
+                           jnp.where(recent, ring_lb[ridx],
+                                     jnp.where(hot, lbh, lbr)))
+        new_row = jnp.where(hit | top, row,
+                            jnp.where(seq, row_seq,
+                                      jnp.where(recent, ring_row[ridx],
+                                                jnp.where(hot, rwh, rwr))))
+        moved = new_row != row  # distinct-row transition: push recency
+        nh = jnp.mod(head + moved.astype(jnp.int32), RECENT_RING)
+        nring_lb = jnp.where(moved, ring_lb.at[nh].set(lb), ring_lb)
+        nring_row = jnp.where(moved, ring_row.at[nh].set(row), ring_row)
+        return ((new_lb, new_row, nring_lb, nring_row, nh),
+                (new_lb, new_row))
+
+    lb0, row0 = hot_entry(jnp.int32(0))  # the reference's stack[0] start
+    ring0 = hot_entry(1 + jnp.arange(RECENT_RING, dtype=jnp.int32))
+    _, (lb, row) = jax.lax.scan(
+        walk, (lb0, row0, ring0[0], ring0[1], jnp.int32(0)),
+        (u_hit, u_seq, u_hot, j_pick, lb_hot, row_hot, lb_rand, row_rand))
+
+    # physical bank via the interleave policy, then pad past `length`
+    # with zeros so the stream is bitwise the padded TraceBatch layout
+    bank = dram_lib.compose_address(geom, il, lb, row)
+    live = step < w.length
+    z = jnp.int32(0)
+    return {
+        "gap": jnp.where(live, gap, z),
+        "bank": jnp.where(live, bank, z),
+        "row": jnp.where(live, row, z),
+        "is_write": is_write & live,
+        "dep": dep & live,
+        "length": w.length,
+    }
+
+
+def generate(n_cores: int, max_len: int, w: WorkloadParams,
+             geom: GeomParams, il: InterleaveParams) -> dict:
+    """The device trace dict (``[C, max_len]`` leaves + ``length [C]``)
+    for one grid point — the exact structure ``simulator._run_impl``
+    consumes (``next_same`` is recomputed post-fold there for every
+    path, so the generator never emits it).  Fully traced in ``w`` /
+    ``geom`` / ``il``; only ``n_cores`` / ``max_len`` are shape facts.
+    """
+    assert n_cores >= 1 and max_len >= 1
+    out = jax.vmap(lambda wc: _gen_core(max_len, wc, geom, il))(w)
+    # length is already [C] from the vmap; keep leaves in trace-dict form
+    return {k: out[k] for k in ("gap", "bank", "row", "is_write", "dep",
+                                "length")}
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _generate_jit(n_cores, max_len, w, geom, il):
+    return generate(n_cores, max_len, w, geom, il)
+
+
+def materialize(spec: WorkloadSpec, dram: DRAMConfig = DDR3_SYSTEM,
+                interleave: InterleaveConfig = InterleaveConfig()
+                ) -> TraceBatch:
+    """The host-materialized view of a generated stream: run the traced
+    generator for one concrete (spec, geometry, interleave) point, pull
+    the arrays to host, and package them as a padded ``TraceBatch``
+    (host ``next_same`` included, for API symmetry with
+    ``batch_traces``).  Feeding this batch through ``simulate()`` is
+    bitwise-identical to the streamed path (``simulate_synth``) — the
+    identity-fold parity contract (tests/test_workloads.py)."""
+    out = _generate_jit(spec.n_cores, spec.max_len, spec_params(spec),
+                        geom_params(dram), interleave_params(interleave))
+    gap, bank, row = (np.asarray(out[k]) for k in ("gap", "bank", "row"))
+    is_write, dep = np.asarray(out["is_write"]), np.asarray(out["dep"])
+    lengths = np.asarray(out["length"], np.int32)
+    ns = np.zeros(gap.shape, bool)
+    for c in range(spec.n_cores):
+        n = int(lengths[c])
+        t = Trace(gap=gap[c, :n], bank=bank[c, :n], row=row[c, :n],
+                  is_write=is_write[c, :n], dep=dep[c, :n])
+        ns[c, :n] = _next_same(t)
+    return TraceBatch(gap=gap, bank=bank, row=row, is_write=is_write,
+                      dep=dep, next_same=ns, length=lengths)

@@ -1,0 +1,68 @@
+"""Counter-based PRNG for the on-device workload generator (DESIGN.md §10.1).
+
+The generator's randomness contract is *counter-based*: every random
+draw is a pure function ``hash(seed, core, lane, step)`` of its
+coordinates — no mutable RNG state threads through the scan, so
+
+* the stream is reproducible from the seed alone (seed determinism),
+* any step's draws can be recomputed independently (the hot-set tables
+  are virtual: entry ``j`` is re-derived on demand, never stored), and
+* ``vmap`` over cores / profiles / grid points cannot perturb the
+  stream (batch invariance — tests/test_workloads.py).
+
+The mixer is the murmur3 finalizer (fmix32) folded over the key words
+with multiply-xor combining — integer-only uint32 arithmetic, which JAX
+evaluates bit-exactly, so the same code runs under ``jit``/``vmap``
+(``xp=jax.numpy``) and as the host mirror (``xp=numpy``) with identical
+outputs (tested).  This is deliberately *not* ``jax.random``: the
+threefry key-split dance would force key plumbing through the scan and
+has no cheap numpy mirror.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["hash_u32", "uniform", "lanes"]
+
+_M1 = 0x85EB_CA6B
+_M2 = 0xC2B2_AE35
+_GOLD = 0x9E37_79B9  # 2**32 / golden ratio: per-word stream separation
+
+#: 1 / 2**24 — the float32 uniform quantum (24 high hash bits)
+_U24 = np.float32(5.9604645e-08)
+
+
+def hash_u32(xp, *words):
+    """Mix any number of integer words (scalars or arrays, broadcast
+    together) into a uint32 hash.  ``xp`` is ``numpy`` or ``jax.numpy``;
+    all arithmetic is uint32 with wraparound, so both backends agree
+    bitwise.
+    """
+    with np.errstate(over="ignore"):  # uint32 wraparound is the contract
+        h = xp.asarray(np.uint32(_GOLD * (len(words) + 1) & 0xFFFF_FFFF))
+        for w in words:
+            if isinstance(w, int):  # lane constants may exceed int32
+                w = np.uint32(w & 0xFFFF_FFFF)
+            w = xp.asarray(w).astype(xp.uint32)
+            h = (h ^ w) * xp.uint32(_M1)
+            h = (h ^ (h >> xp.uint32(15))) * xp.uint32(_M2)
+        # fmix32 finalizer
+        h = h ^ (h >> xp.uint32(16))
+        h = h * xp.uint32(_M1)
+        h = h ^ (h >> xp.uint32(13))
+        h = h * xp.uint32(_M2)
+        h = h ^ (h >> xp.uint32(16))
+        return h
+
+
+def uniform(xp, *words):
+    """float32 uniform in [0, 1) from the top 24 bits of ``hash_u32``."""
+    h = hash_u32(xp, *words)
+    return (h >> xp.uint32(8)).astype(xp.float32) * _U24
+
+
+def lanes(n: int) -> tuple[int, ...]:
+    """``n`` distinct lane constants (golden-ratio strided) for drawing
+    several independent uniforms per (seed, core, step) coordinate."""
+    return tuple((_GOLD * (i + 1)) & 0xFFFF_FFFF for i in range(n))

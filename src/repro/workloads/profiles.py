@@ -1,0 +1,83 @@
+"""Workload profiles as a traced pytree (DESIGN.md §10.1).
+
+``repro.core.traces`` owns the shared 22-profile table (host dataclasses,
+calibrated against the thesis's Section 3/6 aggregates); this module is
+the *traced* view: every statistical knob of a profile becomes a leaf of
+``WorkloadParams`` (float32 probabilities, int32 counts), so a whole
+``workload`` axis stacks along the grid dimension and the generator
+compiles ONCE for every profile — the workload is data, exactly like
+timing, geometry, and mechanism before it.
+
+Leaves are per-core: a ``WorkloadSpec`` with C cores yields ``[C]``
+leaves; ``sweep_synth`` stacks specs into ``[grid, C]``.  The per-core
+row *slice* (multiprogrammed cores conflict on banks, not rows — thesis
+§6.1) is derived inside the generator from the traced geometry as
+``span = n_rows // n_cores`` / ``base = core_index * span``, matching
+``traces.multicore_batch`` on the generating geometry.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.traces import WORKLOAD_BY_NAME, WorkloadProfile, WorkloadSpec
+
+__all__ = ["WorkloadParams", "profile_params", "spec_params", "max_len_of"]
+
+
+class WorkloadParams(NamedTuple):
+    """Traced per-core workload statistics.  Every leaf is an array so
+    profiles are grid data; shapes are ``[]`` per core, ``[C]`` per
+    spec, ``[grid, C]`` across a sweep."""
+    mean_gap: jnp.ndarray     # f32: mean bus cycles between issues
+    p_rowhit: jnp.ndarray     # f32: row-buffer hit-run probability
+    p_hot: jnp.ndarray        # f32: P(new row from the hot set)
+    p_seq: jnp.ndarray        # f32: P(streaming row advance)
+    p_dep: jnp.ndarray        # f32: P(request depends on previous)
+    p_write: jnp.ndarray      # f32
+    stack_zipf: jnp.ndarray   # f32: Zipf exponent (>0) of the hot ranks
+    stack_geo: jnp.ndarray    # f32: geometric fallback when zipf == 0
+    hot_rows: jnp.ndarray     # i32: hot-set size (virtual table entries)
+    n_hot_banks: jnp.ndarray  # i32: banks the hot set concentrates in
+    seed: jnp.ndarray         # i32: stream seed (shared by the spec)
+    core_idx: jnp.ndarray     # i32: this core's index (row-slice + PRNG)
+    n_cores: jnp.ndarray      # i32: active core count (row-slice width)
+    length: jnp.ndarray       # i32: request count (traffic-scaled)
+
+
+def profile_params(p: WorkloadProfile, length: int, seed: int,
+                   core_idx: int, n_cores: int) -> WorkloadParams:
+    """One core's traced params from a host profile."""
+    f = lambda v: jnp.float32(v)
+    i = lambda v: jnp.int32(v)
+    return WorkloadParams(
+        mean_gap=f(max(p.mean_gap, 1.001)), p_rowhit=f(p.p_rowhit),
+        p_hot=f(p.p_hot), p_seq=f(p.p_seq), p_dep=f(p.p_dep),
+        p_write=f(p.p_write), stack_zipf=f(p.stack_zipf),
+        stack_geo=f(p.stack_geo), hot_rows=i(p.hot_rows),
+        n_hot_banks=i(p.n_hot_banks), seed=i(seed), core_idx=i(core_idx),
+        n_cores=i(n_cores), length=i(length),
+    )
+
+
+def spec_params(spec: WorkloadSpec) -> WorkloadParams:
+    """The ``[C]``-leaved traced pytree of a ``WorkloadSpec``."""
+    assert spec.names, "WorkloadSpec has no per-core profile names"
+    lengths = spec.lengths()
+    cores = [profile_params(WORKLOAD_BY_NAME[n], int(lengths[c]), spec.seed,
+                            c, spec.n_cores)
+             for c, n in enumerate(spec.names)]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cores)
+
+
+def max_len_of(specs: Sequence[WorkloadSpec]) -> int:
+    """The static per-core array length shared by a synthetic grid: the
+    largest traffic-scaled request count over every spec (the shape
+    analogue of padding trace batches to the longest trace)."""
+    specs = list(specs)
+    assert specs, "empty workload spec set"
+    return max(int(np.max(s.lengths())) for s in specs)

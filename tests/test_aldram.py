@@ -32,10 +32,7 @@ from repro.core.timing import traced
 from repro.core.traces import single_core_batch
 from repro.experiment import Experiment, Results, registry
 
-BITWISE_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
-                "hcrac_lookups", "row_hits", "row_closed", "row_conflicts",
-                "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts",
-                "total_cycles")
+from _parity import BITWISE_KEYS
 
 
 def _cfg(temp_c: float, kind: str = "aldram", dram=DDR3_SYSTEM) -> SimConfig:

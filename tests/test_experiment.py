@@ -24,17 +24,8 @@ from repro.core.traces import pad_batch_to, single_core_batch
 from repro.experiment import (Experiment, MechanismPolicy, Results, registry,
                               register_mechanism)
 
-#: exact-int stats shared by every launch mode (events are off by default)
-BITWISE_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
-                "hcrac_lookups", "row_hits", "row_closed", "row_conflicts",
-                "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts",
-                "total_cycles")
-
-
-def _assert_cell_matches(ref: dict, got: dict):
-    for k in BITWISE_KEYS:
-        assert int(ref[k]) == int(got[k]), k
-    assert np.array_equal(ref["core_end"], got["core_end"])
+from _parity import BITWISE_KEYS
+from _parity import assert_cell_matches as _assert_cell_matches
 
 
 def test_experiment_matches_sweep_even_chunked():

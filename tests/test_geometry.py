@@ -30,19 +30,11 @@ from repro.experiment import (Experiment, GEOMETRY_PRESETS, Results,
 
 N = 1500
 
-BITWISE_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
-                "hcrac_lookups", "row_hits", "row_closed", "row_conflicts",
-                "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts",
-                "total_cycles")
+from _parity import BITWISE_KEYS
+from _parity import assert_cell_matches as _assert_cell_matches
 
 GEOM_SMALL = DRAMConfig(n_channels=1)
 GEOM_BIG = DRAMConfig(n_channels=2, n_banks=16)
-
-
-def _assert_cell_matches(ref: dict, got: dict):
-    for k in BITWISE_KEYS:
-        assert int(ref[k]) == int(got[k]), k
-    assert np.array_equal(ref["core_end"], got["core_end"])
 
 
 def test_envelope_covers_and_orders():
@@ -251,6 +243,67 @@ def test_padded_banks_never_addressed_in_simulation():
         assert cell["bank_acts"].shape == (GEOM_BIG.banks_total,)
         assert not cell["bank_acts"][nb:].any()
         assert int(cell["bank_acts"].sum()) == int(cell["acts"])
+
+
+def _mini_batch(bank, row):
+    """A deliberate closed-policy batch: one core, unit gaps, no deps."""
+    from repro.core.traces import Trace, batch_traces
+    n = len(bank)
+    return batch_traces([Trace(
+        gap=np.ones(n, np.int32), bank=np.asarray(bank, np.int32),
+        row=np.asarray(row, np.int32), is_write=np.zeros(n, bool),
+        dep=np.zeros(n, bool))])
+
+
+def test_next_same_recomputed_post_fold():
+    """REGRESSION (DESIGN.md §8 caveat, closed in PR 5): folding a
+    2-channel trace onto 1 channel must *change* the closed-row
+    queue-hit lookahead where banks alias.  Banks 0 and 8 collide under
+    the 1-channel fold, so the bank-0 row-5 request's true next
+    same-bank access becomes the aliased row-7 request — the stale host
+    precompute (over unfolded banks) says ``keep open``."""
+    bank = [0, 8, 0]
+    row = [5, 7, 5]
+    batch = _mini_batch(bank, row)
+    # host precompute on the unfolded stream: bank 0 reused with row 5
+    assert batch.next_same[0].tolist() == [True, False, False]
+    one = geom_params(GEOM_SMALL)  # 1 channel: bank 8 -> 0
+    fb, fr = fold_address(one, jnp.asarray(batch.bank), jnp.asarray(batch.row))
+    recomputed = np.asarray(sim_mod._next_same_folded(
+        16, fb, fr, jnp.asarray(batch.length)))
+    # post-fold the row-5 request's next same-bank access is the aliased
+    # row-7 request: the "keep open" hint must flip off
+    assert recomputed[0].tolist() == [False, False, False]
+    # identity fold reproduces the host precompute exactly
+    two = geom_params(DRAMConfig(n_channels=2))
+    fb2, fr2 = fold_address(two, jnp.asarray(batch.bank),
+                            jnp.asarray(batch.row))
+    same = np.asarray(sim_mod._next_same_folded(
+        16, fb2, fr2, jnp.asarray(batch.length)))
+    assert np.array_equal(same, batch.next_same)
+
+
+def test_fold_consistency_with_prefolded_trace():
+    """End-to-end witness that the engine consumes the *recomputed*
+    lookahead: simulating a 2ch-addressed trace on a 1ch geometry must
+    be bitwise the simulation of the explicitly pre-folded trace (whose
+    host lookahead is computed on the folded addresses).  With the
+    stale precompute these differ exactly where folds alias banks."""
+    rng = np.random.default_rng(4)
+    n = 900
+    # banks 0 and 8 alias under the 1ch fold; a tiny row alphabet makes
+    # the stale and folded lookaheads disagree at many positions
+    bank = rng.choice([0, 8, 3], size=n).astype(np.int32)
+    row = rng.choice([5, 7, 9], size=n).astype(np.int32)
+    batch = _mini_batch(bank, row)
+    folded = _mini_batch(bank % GEOM_SMALL.banks_total, row)
+    # the crafted fold must alias somewhere, else this test is vacuous
+    assert not np.array_equal(folded.next_same, batch.next_same)
+    cfg = SimConfig(dram=GEOM_SMALL, policy="closed",
+                    mech=MechanismConfig(kind="chargecache"))
+    a = simulate(batch, cfg)
+    b = simulate(folded, cfg)
+    _assert_cell_matches(a, b)
 
 
 def test_unknown_geometry_preset_rejected():

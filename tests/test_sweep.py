@@ -18,11 +18,7 @@ from repro.core.traces import multicore_batch, single_core_batch
 
 N = 3000
 
-#: every exact-int stat the scan accumulates, plus the post-pass outputs
-BITWISE_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
-                "hcrac_lookups", "row_hits", "row_closed", "row_conflicts",
-                "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts",
-                "total_cycles", "rltl_total")
+from _parity import assert_cell_matches
 
 
 def _cc_cfg(policy="open", n_entries=128, caching_ms=1.0, kind="chargecache"):
@@ -36,10 +32,7 @@ def _cc_cfg(policy="open", n_entries=128, caching_ms=1.0, kind="chargecache"):
 
 
 def _assert_point_matches(ref: dict, got: dict):
-    for k in BITWISE_KEYS:
-        assert int(ref[k]) == int(got[k]), k
-    assert np.array_equal(ref["core_end"], got["core_end"])
-    assert np.array_equal(ref["rltl_hist"], got["rltl_hist"])
+    assert_cell_matches(ref, got, rltl=True)
 
 
 @pytest.mark.slow
@@ -124,11 +117,7 @@ def test_sweep_traces_matches_simulate():
         for g, cfg in enumerate(grid):
             ref = simulate(batch, cfg)
             got = matrix[b][g]
-            for k in BITWISE_KEYS:
-                if k == "rltl_total":
-                    continue  # events not collected by default
-                assert int(ref[k]) == int(got[k]), (b, g, k)
-            assert np.array_equal(ref["core_end"], got["core_end"])
+            assert_cell_matches(ref, got)  # events not collected here
             assert got["rltl_hist"] is None
 
 

@@ -1,0 +1,346 @@
+"""On-device workload synthesis (DESIGN.md §10).
+
+Contracts:
+
+* **Counter-based PRNG**: numpy and JAX backends agree bitwise; streams
+  are pure functions of the seed (determinism) and unperturbed by
+  batching (vmap invariance).
+* **Streamed == materialized**: simulating a generated stream on device
+  (``simulate_synth``) is *bitwise* identical to materializing the same
+  stream to a host ``TraceBatch`` and running the trace-driven path —
+  the identity-fold parity the ISSUE acceptance names.
+* **Interleave layer**: the "bank" policy is the identity; every policy
+  stays inside the active geometry; one active channel collapses all
+  policies (the dedup invariant).
+* **One compile**: a workload × interleave × geometry × mechanism grid
+  through ``Experiment(traces=None)`` costs exactly one compilation.
+* **Statistical parity** (``-m slow``): per profile, the generated
+  stream matches the numpy reference (``core.traces.generate_trace``)
+  within documented tolerances — row-hit rate ±0.08, total cycles ±7 %,
+  HCRAC hit rate ±0.08 (where lookups give signal), RLTL 0.125 ms CDF
+  point ±0.08, top-64 hot-set occupancy ±0.10.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (InterleaveConfig, MechanismConfig, SimConfig,
+                        WorkloadSpec, compose_address, interleave_params,
+                        simulate, simulate_synth, sweep_synth)
+from repro.core import simulator as sim_mod
+from repro.core.dram import DRAMConfig, INTERLEAVE_KINDS, geom_params
+from repro.core.traces import WORKLOADS, single_core_batch
+from repro.experiment import Experiment
+from repro.workloads import (WorkloadParams, generate, materialize, prng,
+                             spec_params)
+
+from _parity import assert_cell_matches as _assert_cell_matches
+
+
+def _cfg(name_or_names, kind="base", n_req=1200, seed=3, **kw) -> SimConfig:
+    names = ((name_or_names,) if isinstance(name_or_names, str)
+             else tuple(name_or_names))
+    policy = "open" if len(names) == 1 else "closed"
+    return SimConfig(mech=MechanismConfig(kind=kind), policy=policy,
+                     workload=WorkloadSpec(names=names, n_req=n_req,
+                                           seed=seed), **kw)
+
+
+# ------------------------------------------------------------------ PRNG
+
+def test_prng_backends_agree_bitwise():
+    words = (12345, 7, np.arange(512))
+    a = prng.hash_u32(np, *words)
+    b = np.asarray(prng.hash_u32(jnp, *words))
+    assert a.dtype == np.uint32 and np.array_equal(a, b)
+    ua = prng.uniform(np, 9, np.arange(4096))
+    ub = np.asarray(prng.uniform(jnp, 9, jnp.arange(4096)))
+    assert np.array_equal(ua, ub)
+    assert 0.0 <= ua.min() and ua.max() < 1.0
+    assert abs(float(ua.mean()) - 0.5) < 0.02  # uniformity sanity
+
+
+def test_prng_lane_separation():
+    """Distinct lanes must decorrelate the same counter coordinates."""
+    lanes = prng.lanes(4)
+    assert len(set(lanes)) == 4
+    xs = np.arange(2048)
+    u = [prng.uniform(np, 1, lane, xs) for lane in lanes]
+    for i in range(4):
+        for j in range(i + 1, 4):
+            assert abs(float(np.corrcoef(u[i], u[j])[0, 1])) < 0.05
+
+
+# -------------------------------------------------- determinism / batching
+
+def test_seed_determinism():
+    spec = WorkloadSpec(names=("milc_like",), n_req=600, seed=11)
+    a = materialize(spec)
+    b = materialize(spec)
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+    c = materialize(dataclasses.replace(spec, seed=12))
+    assert not np.array_equal(a.row, c.row)
+
+
+def test_generate_vmap_batch_invariance():
+    """Generating N profiles stacked along the grid axis must be bitwise
+    the one-at-a-time streams (the counter-based PRNG contract: batching
+    cannot perturb any stream)."""
+    specs = [WorkloadSpec(names=("lbm_like",), n_req=500, seed=1),
+             WorkloadSpec(names=("mcf_like",), n_req=500, seed=2)]
+    geom = geom_params(DRAMConfig())
+    il = interleave_params(InterleaveConfig())
+    singles = [jax.jit(lambda w: generate(1, 500, w, geom, il))(
+        spec_params(s)) for s in specs]
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                     *[spec_params(s) for s in specs])
+    batched = jax.jit(jax.vmap(lambda w: generate(1, 500, w, geom, il)))(
+        stacked)
+    for i, single in enumerate(singles):
+        for k in single:
+            assert np.array_equal(np.asarray(single[k]),
+                                  np.asarray(batched[k][i])), k
+
+
+def test_sweep_synth_matches_single_points_bitwise():
+    cfgs = [_cfg("milc_like"), _cfg("milc_like", kind="chargecache"),
+            _cfg("lbm_like", kind="rltl")]
+    swept = sweep_synth(cfgs)
+    for cfg, got in zip(cfgs, swept):
+        _assert_cell_matches(simulate_synth(cfg), got)
+
+
+# ------------------------------------------- streamed vs materialized
+
+@pytest.mark.parametrize("kind", ["base", "chargecache"])
+def test_streamed_equals_materialized_bitwise(kind):
+    """ACCEPTANCE: the streamed-generation path and the materialized-
+    trace path produce bitwise-equal simulator results (identity fold —
+    the stream is generated for the active geometry)."""
+    cfg = _cfg("milc_like", kind=kind, n_req=1500)
+    a = simulate_synth(cfg)
+    batch = materialize(cfg.workload, cfg.dram, cfg.interleave)
+    b = simulate(batch, cfg)
+    _assert_cell_matches(b, a)
+    assert np.array_equal(a["rltl_hist"], b["rltl_hist"])
+
+
+def test_streamed_equals_materialized_multicore_closed():
+    """Same parity for a multiprogrammed closed-row mix — exercises the
+    per-core row slices, the queue-hit lookahead, and mixed traffic."""
+    cfg = _cfg(("lbm_like", "mcf_like", "stream_copy_like", "hmmer_like"),
+               kind="chargecache", n_req=700)
+    a = simulate_synth(cfg)
+    b = simulate(materialize(cfg.workload, cfg.dram, cfg.interleave), cfg)
+    _assert_cell_matches(b, a)
+
+
+def test_materialized_next_same_matches_device_recompute():
+    """The generator never emits a lookahead: the engine's post-fold
+    recompute must agree with the host ``_next_same`` of the
+    materialized stream (identity fold)."""
+    cfg = _cfg(("milc_like", "soplex_like"), n_req=500)
+    batch = materialize(cfg.workload, cfg.dram, cfg.interleave)
+    dev = np.asarray(sim_mod._next_same_folded(
+        cfg.dram.banks_total, jnp.asarray(batch.bank),
+        jnp.asarray(batch.row), jnp.asarray(batch.length)))
+    assert np.array_equal(dev, batch.next_same)
+
+
+# ------------------------------------------------------------- interleave
+
+def test_interleave_bank_policy_is_identity():
+    geom = geom_params(DRAMConfig())  # 2ch x 8 banks
+    il = interleave_params(InterleaveConfig(kind="bank"))
+    lb = jnp.arange(DRAMConfig().banks_total, dtype=jnp.int32)
+    row = jnp.arange(DRAMConfig().banks_total, dtype=jnp.int32) * 37
+    assert np.array_equal(np.asarray(compose_address(geom, il, lb, row)),
+                          np.asarray(lb))
+
+
+@pytest.mark.parametrize("kind", INTERLEAVE_KINDS)
+def test_interleave_lands_in_active_geometry(kind):
+    for dram in (DRAMConfig(), DRAMConfig(n_channels=1, n_banks=4),
+                 DRAMConfig(n_channels=2, n_banks=16)):
+        geom = geom_params(dram)
+        il = interleave_params(InterleaveConfig(kind=kind, block_rows=8))
+        lb = jnp.arange(dram.banks_total, dtype=jnp.int32)
+        row = (prng.hash_u32(jnp, 5, jnp.arange(dram.banks_total))
+               % jnp.uint32(dram.n_rows)).astype(jnp.int32)
+        bank = np.asarray(compose_address(geom, il, lb, row))
+        assert bank.min() >= 0 and bank.max() < dram.banks_total
+
+
+def test_interleave_collapses_on_one_channel():
+    """With one active channel every policy is the identity — the
+    invariant behind the runner's interleave-axis dedup."""
+    dram = DRAMConfig(n_channels=1)
+    geom = geom_params(dram)
+    lb = jnp.arange(dram.banks_total, dtype=jnp.int32)
+    row = lb * 101 + 7
+    outs = [np.asarray(compose_address(
+        geom, interleave_params(InterleaveConfig(kind=k)), lb, row))
+        for k in INTERLEAVE_KINDS]
+    for o in outs[1:]:
+        assert np.array_equal(outs[0], o)
+    assert np.array_equal(outs[0], np.asarray(lb))
+
+
+def test_interleave_respreads_channels_not_rows():
+    """Changing the interleave policy re-maps *channels* only: the row
+    stream, gaps, and mix are untouched, and row interleaving spreads a
+    streaming workload across channels more evenly than bank homing."""
+    spec = WorkloadSpec(names=("stream_copy_like",), n_req=2000, seed=5)
+    dram = DRAMConfig()  # 2 channels
+    a = materialize(spec, dram, InterleaveConfig(kind="bank"))
+    b = materialize(spec, dram, InterleaveConfig(kind="row"))
+    assert np.array_equal(a.row, b.row)
+    assert np.array_equal(a.gap, b.gap)
+    assert np.array_equal(a.is_write, b.is_write)
+    assert not np.array_equal(a.bank, b.bank)
+    bpc = dram.banks_per_channel
+    n = int(a.length[0])
+    bal = lambda bank: np.bincount(bank[0, :n] // bpc, minlength=2).min() / n
+    assert bal(b.bank) >= bal(a.bank)  # row-interleave spreads streams
+
+
+# ------------------------------------------------------- Experiment mode
+
+def test_workload_grid_one_compile_4d():
+    """ACCEPTANCE: workload × interleave × geometry × mechanism through
+    ``Experiment(traces=None)`` rides exactly ONE compilation, dedups
+    interleave-insensitive points, and matches standalone streamed
+    runs bitwise."""
+    base = _cfg("milc_like", n_req=900)
+    axes = {"workload": ["milc_like", "lbm_like"],
+            "interleave": ["bank", "xor"],
+            "geometry": ["ddr3_1ch", "ddr3_2ch"],
+            "mechanism": ["base", "chargecache"]}
+    before = sim_mod._run_synth_batched._cache_size()
+    res = Experiment(traces=None, axes=axes, base=base).run()
+    assert sim_mod._run_synth_batched._cache_size() - before == 1, \
+        "synthetic grids must ride one compilation"
+    assert res.dims == ("workload", "interleave", "geometry", "mechanism")
+    # single-channel points dedup across the interleave axis
+    assert res.meta["n_unique"] < res.meta["n_configs"] == 16
+    cell = res.point(workload="lbm_like", interleave="xor",
+                     geometry="ddr3_2ch", mechanism="chargecache")
+    ref = simulate_synth(dataclasses.replace(
+        _cfg("lbm_like", kind="chargecache", n_req=900),
+        interleave=InterleaveConfig(kind="xor")))
+    _assert_cell_matches(ref, cell)
+
+
+def test_synth_grid_chunked_parity():
+    """Chunked synthetic launches share the padded shape (the full grid
+    rides as ``shape_grid``) and reassemble bitwise-identically to the
+    unchunked run."""
+    base = _cfg("milc_like", n_req=700, seed=2)
+    axes = {"workload": ["milc_like", "lbm_like", "gcc_like"],
+            "mechanism": ["base", "chargecache"]}
+    whole = Experiment(traces=None, axes=axes, base=base).run()
+    small = Experiment(traces=None, axes=axes, base=base,
+                       chunk_size=2).run()
+    assert small.meta["n_chunks"] >= 2 and whole.meta["n_chunks"] == 1
+    for a, b in zip(whole.cells.flat, small.cells.flat):
+        _assert_cell_matches(a, b)
+
+
+def test_synth_mode_requires_workload():
+    with pytest.raises(AssertionError):
+        Experiment(traces=None, axes={"mechanism": ["base"]}).run()
+
+
+def test_ambiguous_workload_tuple_rejected():
+    """A bare 2-tuple of profile names would silently decay to the
+    generic (label, value) convention and run the wrong single-core
+    stream — expand() must reject it; an explicit (label, spec) pair
+    stays legal."""
+    base = _cfg("gcc_like", n_req=100)
+    with pytest.raises(AssertionError, match="ambiguous workload"):
+        Experiment(traces=None, base=base,
+                   axes={"workload": [("lbm_like", "wrf_like")]}).expand()
+    _, _, cfgs = Experiment(
+        traces=None, base=base,
+        axes={"workload": [("small", WorkloadSpec(names=("gcc_like",),
+                                                  n_req=120))]}).expand()
+    assert cfgs[0].workload.n_req == 120
+
+
+def test_workload_axis_inherits_spec_sizing():
+    base = SimConfig(workload=WorkloadSpec(names=("gcc_like",), n_req=777,
+                                           seed=9))
+    # NOTE: mixes are passed as *lists* — a 2-tuple axis value is the
+    # generic (label, value) convention of ``_axis_items``
+    _, _, cfgs = Experiment(
+        traces=None, base=base,
+        axes={"workload": ["mcf_like", ["lbm_like", "wrf_like"]]}).expand()
+    assert cfgs[0].workload == WorkloadSpec(names=("mcf_like",), n_req=777,
+                                            seed=9)
+    assert cfgs[1].workload.names == ("lbm_like", "wrf_like")
+    assert cfgs[1].workload.n_req == 777
+
+
+# ------------------------------------------------- statistical parity
+
+def _ref_and_synth(name: str, n_req: int, kind: str = "base"):
+    batch = single_core_batch(name, n_req, seed=3)
+    ref = simulate(batch, SimConfig(mech=MechanismConfig(kind=kind)))
+    syn = simulate_synth(_cfg(name, kind=kind, n_req=n_req))
+    return batch, ref, syn
+
+
+def _assert_profile_parity(name: str, n_req: int):
+    batch, ref, syn = _ref_and_synth(name, n_req)
+    assert abs(ref["row_hit_rate"] - syn["row_hit_rate"]) <= 0.08, name
+    ratio = syn["total_cycles"] / max(ref["total_cycles"], 1)
+    assert abs(ratio - 1.0) <= 0.07, (name, ratio)
+    # RLTL curve point: CDF at the 0.125 ms bucket (thesis Fig 3.2)
+    for s in (ref, syn):
+        assert s["rltl_hist"] is not None
+    cdf = lambda s: s["rltl_hist"][:1].sum() / max(s["rltl_hist"].sum(), 1)
+    assert abs(cdf(ref) - cdf(syn)) <= 0.08, name
+    # hot-set occupancy: mass of the 64 most popular (bank, row) pairs
+    spec = WorkloadSpec(names=(name,), n_req=n_req, seed=3)
+    mat = materialize(spec)
+
+    def occ(bank, row, n):
+        gid = bank[:n].astype(np.int64) * (1 << 32) + row[:n]
+        _, counts = np.unique(gid, return_counts=True)
+        return np.sort(counts)[::-1][:64].sum() / n
+
+    o_ref = occ(batch.bank[0], batch.row[0], int(batch.length[0]))
+    o_syn = occ(mat.bank[0], mat.row[0], int(mat.length[0]))
+    assert abs(o_ref - o_syn) <= 0.10, (name, o_ref, o_syn)
+
+
+def test_statistical_parity_smoke():
+    """Fast tier: two contrasting profiles (hot-set thrasher and
+    streamer); the full 22-profile suite is the slow tier."""
+    for name in ("milc_like", "stream_copy_like"):
+        _assert_profile_parity(name, 2500)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("profile", [w.name for w in WORKLOADS])
+def test_statistical_parity_all_profiles(profile):
+    _assert_profile_parity(profile, 4000)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("profile", ["mcf_like", "milc_like", "gcc_like",
+                                     "stream_copy_like"])
+def test_hcrac_hit_rate_parity(profile):
+    """The mechanism's own signal: ChargeCache HCRAC hit rate within
+    ±0.08 of the reference wherever the trace gives signal (≥ 500
+    lookups on both sides)."""
+    _, ref, syn = _ref_and_synth(profile, 4000, kind="chargecache")
+    assert int(ref["hcrac_lookups"]) >= 500
+    assert int(syn["hcrac_lookups"]) >= 500
+    assert abs(ref["hcrac_hit_rate"] - syn["hcrac_hit_rate"]) <= 0.08, (
+        profile, ref["hcrac_hit_rate"], syn["hcrac_hit_rate"])
