@@ -25,7 +25,8 @@ import numpy as np
 from benchmarks import common as C
 from repro.core import TEMPERATURE_BINS_C
 
-ALDRAM_JSON = os.environ.get("REPRO_BENCH_ALDRAM_JSON", "BENCH_aldram.json")
+ALDRAM_JSON = C.artifact_path(
+    os.environ.get("REPRO_BENCH_ALDRAM_JSON", "BENCH_aldram.json"))
 
 TEMPS = TEMPERATURE_BINS_C            # 55 / 70 / 85 °C
 GEOMS = ("ddr3_2ch", "ddr3_1ch")

@@ -37,6 +37,18 @@ from repro.experiment.results import Results
 
 QUICK = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
 
+#: the repo root — every ``BENCH_*.json`` artifact lands here regardless
+#: of the CWD the driver was invoked from (the artifacts are part of the
+#: repo's delivered trajectory; a relative default silently scattered
+#: them before PR 6)
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def artifact_path(name: str) -> str:
+    """Resolve a ``BENCH_*.json`` artifact name to the repo root (env
+    overrides that are already absolute are respected verbatim)."""
+    return name if os.path.isabs(name) else os.path.join(REPO_ROOT, name)
+
 N_REQ_1C = 20_000 if QUICK else 150_000
 N_REQ_8C = 5_000 if QUICK else 40_000
 N_MIXES = 2 if QUICK else 20
@@ -93,8 +105,10 @@ def compile_counted(fn, *args, **kw):
     synthetic streamed engine).  The shared harness behind every
     benchmark's "this whole study rides ONE compilation" assertion."""
     from repro.core import simulator as sim_mod
+    from repro.kernels.sim_step import ops as sim_step_ops
     engines = (sim_mod._run_grid, sim_mod._run_batched,
-               sim_mod._run_synth_batched)
+               sim_mod._run_synth_batched,
+               sim_step_ops._sweep_pallas, sim_step_ops._synth_pallas)
     before = [e._cache_size() for e in engines]
     out = fn(*args, **kw)
     compiles = sum(e._cache_size() - b

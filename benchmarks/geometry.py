@@ -21,8 +21,8 @@ import os
 
 from benchmarks import common as C
 
-GEOMETRY_JSON = os.environ.get("REPRO_BENCH_GEOMETRY_JSON",
-                               "BENCH_geometry.json")
+GEOMETRY_JSON = C.artifact_path(
+    os.environ.get("REPRO_BENCH_GEOMETRY_JSON", "BENCH_geometry.json"))
 
 #: thesis direction: ordering is over *decreasing* parallelism
 GEOMS = ("ddr3_2ch", "ddr3_1ch", "ddr3_1ch_4bank")

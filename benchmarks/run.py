@@ -5,6 +5,12 @@ mapping to the thesis's tables/figures) and writes a machine-readable
 ``BENCH_results.json`` (name -> us_per_call + parsed derived values)
 next to the CSV stream.  REPRO_BENCH_QUICK=1 shrinks workloads for CI
 and exercises the ``sweep()`` engine end to end (sweep_bench).
+
+**Artifact contract**: every ``BENCH_*.json`` lands at the repo root
+(``common.artifact_path``), never the invoking CWD — a module that
+declares an artifact and completes without writing it is a driver
+*failure*, not a silent skip.  The run ends with one summary line
+listing emitted vs skipped artifacts.
 """
 
 from __future__ import annotations
@@ -12,9 +18,13 @@ from __future__ import annotations
 import json
 import os
 import sys
+import time
 import traceback
 
-RESULTS_JSON = os.environ.get("REPRO_BENCH_JSON", "BENCH_results.json")
+from benchmarks import common as C
+
+RESULTS_JSON = C.artifact_path(
+    os.environ.get("REPRO_BENCH_JSON", "BENCH_results.json"))
 
 
 def _parse_derived(derived: str) -> dict:
@@ -45,27 +55,31 @@ def _record(results: dict, row: str) -> None:
 def main() -> None:
     from benchmarks import (aldram, capacity, charge_model_bench, duration,
                             energy, geometry, kernels_bench, rltl,
-                            roofline_bench, serving_trace, speedup,
-                            sweep_bench, workloads)
+                            roofline_bench, serving_trace, simstep_bench,
+                            speedup, sweep_bench, workloads)
+    # (name, module, declared BENCH_* artifacts the module must emit)
     mods = [
-        ("charge_model", charge_model_bench),
-        ("rltl", rltl),
-        ("sweep", sweep_bench),
-        ("speedup", speedup),
-        ("energy", energy),
-        ("capacity", capacity),
-        ("duration", duration),
-        ("geometry", geometry),
-        ("aldram", aldram),
-        ("workloads", workloads),
-        ("serving", serving_trace),
-        ("kernels", kernels_bench),
-        ("roofline", roofline_bench),
+        ("charge_model", charge_model_bench, ()),
+        ("rltl", rltl, ()),
+        ("sweep", sweep_bench, ()),
+        ("speedup", speedup, ()),
+        ("energy", energy, ()),
+        ("capacity", capacity, ()),
+        ("duration", duration, ()),
+        ("geometry", geometry, ("BENCH_geometry.json",)),
+        ("aldram", aldram, ("BENCH_aldram.json",)),
+        ("workloads", workloads, ("BENCH_workloads.json",)),
+        ("simstep", simstep_bench, ("BENCH_simstep.json",)),
+        ("serving", serving_trace, ()),
+        ("kernels", kernels_bench, ()),
+        ("roofline", roofline_bench, ()),
     ]
     print("name,us_per_call,derived")
     results: dict = {}
-    failed = []
-    for name, mod in mods:
+    failed, missing = [], []
+    emitted, skipped = [], []
+    for name, mod, artifacts in mods:
+        t_start = time.time()
         try:
             for row in mod.run():
                 print(row, flush=True)
@@ -76,10 +90,29 @@ def main() -> None:
             print(f"{name},0,ERROR:{type(e).__name__}", flush=True)
             results[name] = {"us_per_call": None, "derived": None,
                              "error": type(e).__name__}
+            skipped.extend(artifacts)
+            continue
+        for art in artifacts:
+            path = C.artifact_path(art)
+            # freshness guard: a stale artifact from an earlier run must
+            # not mask a module that stopped emitting
+            if os.path.exists(path) and os.path.getmtime(path) >= t_start:
+                emitted.append(art)
+            else:
+                # the module "succeeded" without its declared artifact —
+                # exactly the silent-miss mode PRs 3-5 shipped with
+                missing.append(art)
     with open(RESULTS_JSON, "w") as f:
         json.dump(results, f, indent=2, sort_keys=True)
+    emitted.append(os.path.basename(RESULTS_JSON))
     print(f"# wrote {RESULTS_JSON} ({len(results)} entries)", flush=True)
-    if failed:
+    print("# artifacts: emitted=[" + ", ".join(emitted) + "]"
+          + " skipped=[" + ", ".join(skipped) + "]"
+          + " MISSING=[" + ", ".join(missing) + "]", flush=True)
+    if missing:
+        print(f"# FATAL: {len(missing)} declared artifact(s) silently "
+              f"missing: {missing}", flush=True)
+    if failed or missing:
         sys.exit(1)
 
 

@@ -1,0 +1,288 @@
+"""Sim-step kernel tier: steps/sec across engines (DESIGN.md §11).
+
+One ``BENCH_simstep.json``, four claims:
+
+1. **steps/sec, ref vs kernel, per stream length** — the same synthetic
+   (fused-generation) and trace-driven grids through ``backend="ref"``
+   (the vmapped ``lax.scan`` engine, device-sharded) and
+   ``backend="pallas"`` (the ``kernels.sim_step`` grid kernel; interpret
+   mode on CPU).  Interpret mode is the *portability/parity* tier — on
+   CPU it forgoes the ref engine's multi-device sharding, so its
+   steps/sec are reported as measured, not cherry-picked; the kernel's
+   perf tier is a real accelerator grid.
+2. **Engine-stack comparison** — the PR-6 engine (hoisted
+   per-distinct-geometry ``next_same`` + backend-dispatched RLTL
+   post-pass) vs the PR-5 stack (per-point recompute + unconditional
+   host RLTL) on a geometry×mechanism grid, end to end at ≥2 stream
+   lengths, medians over steady-state runs.
+3. **Micro splits** — the hoist and both arms of the RLTL dispatch in
+   isolation (same inputs, only the one mechanism changed), plus the
+   hoist's *launch-capacity* win: the ``9·n_steps``→``n_steps``
+   ``bytes_per_point`` cut multiplies the points one auto-chunk budget
+   admits (this is the measured speedup the hoist delivers on every
+   backend — fewer launches per mega-grid — while its wall-time term
+   sits under this container's noise floor).
+4. **HLO profile** — ``analysis/hlo.py`` bytes of the lowered engine
+   before/after hoisting (the traffic cut made visible in the compiled
+   program) + the ``analysis/roofline.py`` terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.analysis import hlo as hlo_lib
+from repro.analysis import roofline as roofline_lib
+from repro.core import WorkloadSpec, simulator as sim_mod, sweep, sweep_synth
+from repro.core.simulator import Events
+from repro.core.traces import multicore_batch
+from repro.experiment.spec import GEOMETRY_PRESETS
+
+SIMSTEP_JSON = C.artifact_path(
+    os.environ.get("REPRO_BENCH_SIMSTEP_JSON", "BENCH_simstep.json"))
+
+LENS = (1500, 3000) if C.QUICK else (5000, 20000)
+MIX = ["mcf_like", "omnetpp_like", "tpcc64_like", "milc_like",
+       "soplex_like", "sphinx3_like", "gcc_like", "astar_like"]
+GEOMS = ("ddr3_2ch", "ddr3_1ch", "ddr3_1ch_16bank")
+#: (mechanism, per-core HCRAC entries): several points per *distinct*
+#: geometry, so the hoisted lookahead is reused (3 tables serve 12
+#: points) exactly as in a real capacity x geometry study
+MECHS = (("base", 128), ("chargecache", 128), ("chargecache", 512),
+         ("cc_nuat", 128))
+
+
+def _grid(n_req: int, backend: str, synth: bool):
+    """geometry × mechanism/capacity grid (12 points), one 8-core mix."""
+    cfgs = []
+    for g in GEOMS:
+        for k, cap in MECHS:
+            cfg = dataclasses.replace(C.sim_cfg(k, 8, n_entries=cap),
+                                      dram=GEOMETRY_PRESETS[g],
+                                      backend=backend)
+            if synth:
+                cfg = dataclasses.replace(
+                    cfg, workload=WorkloadSpec(names=tuple(MIX),
+                                               n_req=n_req, seed=3))
+            cfgs.append(cfg)
+    return cfgs
+
+
+def _timed_runs(fn, iters: int = 3) -> float:
+    """Median of ``iters`` steady-state runs (the warm call is free).
+
+    Median, not mean: this container oversubscribes the XLA host
+    devices onto few cores, so single runs jitter ±20% — medians keep
+    the reported ratios from manufacturing (or hiding) a win."""
+    fn()  # warm the compile; timings below are steady-state
+    ts = []
+    for _ in range(iters):
+        t0 = time.time()
+        fn()
+        ts.append(time.time() - t0)
+    return float(np.median(ts)) * 1e6
+
+
+def steps_per_sec() -> dict:
+    """Claim 1: the ref-vs-kernel steps/sec table, ≥2 stream lengths."""
+    out: dict = {"synth": {}, "trace": {}}
+    for n_req in LENS:
+        row_s, row_t = {}, {}
+        n_points = len(GEOMS) * len(MECHS)
+        for backend in ("ref", "pallas"):
+            cfgs = _grid(n_req, backend, synth=True)
+            us = _timed_runs(lambda c=cfgs: sweep_synth(c, rltl=False))
+            # fused path scans n_cores * max_len padded steps per point
+            n_steps = 8 * int(np.max(cfgs[0].workload.lengths()))
+            row_s[backend] = n_steps * n_points / (us / 1e6)
+
+            batch = multicore_batch(MIX, n_req, seed=3)
+            cfgs = _grid(n_req, backend, synth=False)
+            us = _timed_runs(lambda c=cfgs, b=batch: sweep(b, c, rltl=False))
+            row_t[backend] = int(batch.length.sum()) * n_points / (us / 1e6)
+        row_s["ratio"] = row_s["pallas"] / row_s["ref"]
+        row_t["ratio"] = row_t["pallas"] / row_t["ref"]
+        out["synth"][str(n_req)] = row_s
+        out["trace"][str(n_req)] = row_t
+    return out
+
+
+def _engine_args(n_req: int, rltl: bool):
+    cfgs = _grid(n_req, "ref", synth=False)
+    batch = multicore_batch(MIX, n_req, seed=3)
+    shape, stacked = sim_mod._grid_shape_and_params(cfgs, None)
+    trace = sim_mod._device_trace(batch)
+    n_steps = int(batch.length.sum())
+    warmup = np.int32(int(cfgs[0].warmup_frac * n_steps))
+    ns_geoms, ns_idx = sim_mod._hoist_geoms(cfgs, cfgs)
+    return shape, stacked, trace, warmup, n_steps, rltl, ns_geoms, ns_idx
+
+
+def engine_stack() -> dict:
+    """Claims 2+3: PR-6 engine stack vs the PR-5 stack, plus the hoist
+    and device-RLTL mechanisms timed in isolation.
+
+    Wall-time honesty: on this CPU container the hoist's arithmetic
+    saving sits near the scheduler-noise floor (the scan itself
+    dominates), so ``end_to_end``/``hoist`` hover around 1.0 here; the
+    hoist's *deliverable* is the per-point traffic cut — measured in
+    the compiled program by ``hlo_profile`` and, operationally, as
+    ``chunk_capacity``: how many more grid points one launch budget
+    admits now that the auto-chunker's ``bytes_per_point`` no longer
+    carries the ``9·n_steps`` recompute term.  ``rltl_device`` measures
+    both sides of the ``_rltl_np`` dispatch: on CPU the host pass wins
+    (~8-11x — which is exactly why the dispatch exists); on an
+    accelerator the device pass keeps the event stream resident."""
+    from repro.experiment import runner
+    out = {"end_to_end": {}, "hoist": {}, "rltl_device": {},
+           "chunk_capacity": {}}
+    for n_req in LENS:
+        (shape, stacked, trace, warmup, n_steps, _r, ns_geoms,
+         ns_idx) = _engine_args(n_req, True)
+
+        def old_stack():
+            # PR-5: per-point fold+lookahead recompute, host RLTL over
+            # the transferred per-point event streams
+            _st, _ce, ev = jax.block_until_ready(sim_mod._run_batched(
+                shape, stacked, trace, warmup, n_steps, True))
+            ev = Events(*(np.asarray(e) for e in ev))
+            return [sim_mod._rltl_post_pass(Events(*(e[g] for e in ev)))
+                    for g in range(len(GEOMS) * len(MECHS))]
+
+        def new_stack():
+            # PR-6: hoisted lookahead tables, on-device RLTL (only the
+            # [10]-bucket histograms cross to the host)
+            _st, _ce, ev = jax.block_until_ready(sim_mod._run_batched(
+                shape, stacked, trace, warmup, n_steps, True,
+                ns_geoms, ns_idx))
+            return sim_mod._rltl_np(ev)
+
+        old_us = _timed_runs(old_stack)
+        new_us = _timed_runs(new_stack)
+        out["end_to_end"][str(n_req)] = {
+            "old_us": old_us, "new_us": new_us,
+            "speedup": old_us / max(new_us, 1e-9)}
+
+        # hoist alone (no events → no RLTL term on either side)
+        unhoisted = _timed_runs(lambda: jax.block_until_ready(
+            sim_mod._run_batched(shape, stacked, trace, warmup, n_steps,
+                                 False)))
+        hoisted = _timed_runs(lambda: jax.block_until_ready(
+            sim_mod._run_batched(shape, stacked, trace, warmup, n_steps,
+                                 False, ns_geoms, ns_idx)))
+        out["hoist"][str(n_req)] = {
+            "unhoisted_us": unhoisted, "hoisted_us": hoisted,
+            "speedup": unhoisted / max(hoisted, 1e-9)}
+
+        # RLTL pass alone, same events on both sides
+        _st, _ce, ev = jax.block_until_ready(sim_mod._run_batched(
+            shape, stacked, trace, warmup, n_steps, True, ns_geoms,
+            ns_idx))
+        ev_np = Events(*(np.asarray(e) for e in ev))
+        host_us = _timed_runs(lambda: [
+            sim_mod._rltl_post_pass(Events(*(e[g] for e in ev_np)))
+            for g in range(len(GEOMS) * len(MECHS))])
+        # force the device pass (on CPU _rltl_np auto-dispatches to the
+        # host loop above — the whole point of the measured dispatch)
+        dev_us = _timed_runs(lambda: sim_mod._rltl_np(ev, on_device=True))
+        out["rltl_device"][str(n_req)] = {
+            "host_us": host_us, "device_us": dev_us,
+            "speedup": host_us / max(dev_us, 1e-9),
+            # what the backend dispatch buys on THIS backend: picking
+            # host over a naive always-on-device pass
+            "dispatch_speedup_cpu": dev_us / max(host_us, 1e-9)}
+
+        # the hoist's launch-capacity effect: points per auto-chunk
+        # budget through the estimate _auto_chunk actually consults
+        # (the old estimate added 9·n_steps per point, the new one
+        # n_steps — see runner.bytes_per_point)
+        cfgs = _grid(n_req, "ref", synth=False)
+        new_bpp = runner.bytes_per_point(
+            n_steps=n_steps,
+            n_sets_max=max(c.mech.hcrac.n_sets for c in cfgs),
+            n_ways=cfgs[0].mech.hcrac.n_ways, n_cores=8,
+            mshr=cfgs[0].mshr, n_traces=1, rltl=False,
+            n_banks_total=max(c.dram.banks_total for c in cfgs),
+            n_channels=max(c.dram.n_channels for c in cfgs))
+        old_bpp = new_bpp + 8 * n_steps
+        budget = runner.DEFAULT_BUDGET_MB * 2**20
+        out["chunk_capacity"][str(n_req)] = {
+            "bytes_per_point_old": old_bpp, "bytes_per_point_new": new_bpp,
+            "points_per_budget_old": int(budget // old_bpp),
+            "points_per_budget_new": int(budget // new_bpp),
+            "capacity_ratio": old_bpp / max(new_bpp, 1)}
+    return out
+
+
+def hlo_profile() -> dict:
+    """Claim 4: the hoist's traffic cut in the compiled program."""
+    (shape, stacked, trace, warmup, n_steps, _r, ns_geoms,
+     ns_idx) = _engine_args(LENS[0], False)
+    txt_old = sim_mod._run_batched.lower(
+        shape, stacked, trace, warmup, n_steps, False).compile().as_text()
+    txt_new = sim_mod._run_batched.lower(
+        shape, stacked, trace, warmup, n_steps, False, ns_geoms,
+        ns_idx).compile().as_text()
+    old = hlo_lib.analyze(txt_old)
+    new = hlo_lib.analyze(txt_new)
+    # the scan engine is integer-only (no dot ops), so the dot-operand
+    # floor (bytes_min) is legitimately zero; the roofline's memory term
+    # must come from the fusion-boundary traffic instead
+    return {
+        "unhoisted": old, "hoisted": new,
+        "bytes_saved_frac": 1.0 - new["bytes"] / max(old["bytes"], 1.0),
+        "roofline_hoisted": roofline_lib.roofline(
+            {"flops": new["flops"], "bytes": new["bytes"]}).table_row(),
+    }
+
+
+def run() -> list[str]:
+    sps = steps_per_sec()
+    stack = engine_stack()
+    prof = hlo_profile()
+
+    doc = {
+        "backend": jax.default_backend(),
+        "n_devices": len(jax.devices()),
+        "grid": {"geometries": list(GEOMS), "mechanisms": list(MECHS),
+                 "n_cores": 8, "lens": list(LENS)},
+        "steps_per_sec": sps,
+        "engine_stack": stack,
+        "hlo": prof,
+        # bitwise ref/pallas parity is asserted by tests/test_kernels.py
+        # over every registered mechanism; this artifact only carries perf
+        "parity": "tests/test_kernels.py::test_sim_step_*",
+    }
+    with open(SIMSTEP_JSON, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+
+    big = str(max(LENS))
+    e2e = stack["end_to_end"]
+    return [
+        C.csv_row(
+            "simstep_steps_per_sec", 0,
+            ";".join(f"L{k}_{arm}_{b}={sps[arm][k][b]:.0f}"
+                     for arm in ("synth", "trace")
+                     for k in sps[arm]
+                     for b in ("ref", "pallas"))),
+        C.csv_row(
+            "simstep_engine_stack", e2e[big]["new_us"],
+            ";".join(f"L{k}_speedup={v['speedup']:.2f}"
+                     for k, v in e2e.items())
+            + f";hoist={stack['hoist'][big]['speedup']:.2f}"
+            + f";rltl_dispatch={stack['rltl_device'][big]['dispatch_speedup_cpu']:.2f}"
+            + f";chunk_capacity={stack['chunk_capacity'][big]['capacity_ratio']:.2f}"
+            + f";hlo_bytes_saved={prof['bytes_saved_frac']:.3f}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -30,8 +30,8 @@ from benchmarks import common as C
 from repro.core import WorkloadSpec, sweep, sweep_synth
 from repro.workloads import materialize
 
-WORKLOADS_JSON = os.environ.get("REPRO_BENCH_WORKLOADS_JSON",
-                                "BENCH_workloads.json")
+WORKLOADS_JSON = C.artifact_path(
+    os.environ.get("REPRO_BENCH_WORKLOADS_JSON", "BENCH_workloads.json"))
 
 INTERLEAVES = ("bank", "row", "block", "xor")
 GEOMS = ("ddr3_2ch", "ddr3_1ch")

@@ -34,8 +34,11 @@ import dataclasses
 from typing import Iterable, NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
-NO_ROW = jnp.int32(-1)
+# np (not jnp) scalar: strongly-typed int32 with identical promotion,
+# but literalable — Pallas kernel bodies may close over it (DESIGN.md §11)
+NO_ROW = np.int32(-1)
 
 
 @dataclasses.dataclass(frozen=True)

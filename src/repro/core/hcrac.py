@@ -46,8 +46,10 @@ import dataclasses
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
-NO_TAG = jnp.int32(-1)
+# np scalar so Pallas kernel bodies may close over it (see dram.NO_ROW)
+NO_TAG = np.int32(-1)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -66,7 +66,8 @@ from repro.core.traces import TraceBatch, WorkloadSpec
 from repro.core import mechanisms as registry
 from repro.core.mechanisms import default_nuat_bins  # noqa: F401 (re-export)
 
-INF = jnp.int32(2**30)
+# np scalar so Pallas kernel bodies may close over it (see dram.NO_ROW)
+INF = np.int32(2**30)
 
 #: RLTL histogram bucket upper edges, in ms (thesis Fig 3.2 uses
 #: 0.125..32 ms; we add finer + coarser tails).
@@ -111,9 +112,18 @@ class SimConfig:
     #: only consumed when ``workload`` is set (host traces address
     #: global banks directly, the "bank" identity policy)
     interleave: InterleaveConfig = InterleaveConfig()
+    #: engine tier for the batched entry points (DESIGN.md §11):
+    #: "ref" is the authoritative ``lax.scan`` engine; "pallas" routes
+    #: ``sweep()`` / ``sweep_synth()`` through the ``kernels.sim_step``
+    #: Pallas kernel (grid-parallel over the sweep batch dimension,
+    #: interpret-mode on CPU) — bitwise-identical by contract (tested).
+    #: ``simulate()`` / ``simulate_synth()`` are the single-point
+    #: *reference* views and always run the ref engine.
+    backend: str = "ref"
 
     def __post_init__(self):
         assert self.policy in ("open", "closed")
+        assert self.backend in ("ref", "pallas"), self.backend
 
 
 # --------------------------------------------------------------------------
@@ -521,16 +531,60 @@ def _next_same_folded(nb: int, bank, row, length):
 def _run_impl(shape: SimShape, params: MechParams, trace: dict,
               warmup_steps, n_steps: int, collect_events: bool = True):
     n_cores, L = trace["gap"].shape
-    # queue-hit lookahead over the *folded* stream — exact for identity
-    # and non-identity geometry folds alike (see _next_same_folded)
-    fb, fr = fold_address(params.geom, trace["bank"], trace["row"])
     trace = dict(trace)
-    trace["next_same"] = _next_same_folded(
-        shape.envelope.max_banks_total, fb, fr, trace["length"])
+    if "next_same" not in trace:
+        # queue-hit lookahead over the *folded* stream — exact for
+        # identity and non-identity geometry folds alike (see
+        # _next_same_folded).  Grid engines that know each point's
+        # geometry host-side hoist this to one lookahead per *distinct*
+        # geometry (``_ns_tables``) and pass the per-point view in.
+        fb, fr = fold_address(params.geom, trace["bank"], trace["row"])
+        trace["next_same"] = _next_same_folded(
+            shape.envelope.max_banks_total, fb, fr, trace["length"])
     st = _init_state(shape, n_cores, L)
     step = _make_step(shape, params, trace, warmup_steps, collect_events)
     st, events = jax.lax.scan(step, st, jnp.arange(n_steps, dtype=jnp.int32))
     return st.stats, st.core_end, events
+
+
+def _ns_tables(shape: SimShape, trace: dict, ns_geoms: GeomParams):
+    """One folded queue-hit lookahead per *distinct* grid geometry.
+
+    ``ns_geoms`` stacks one ``GeomParams`` per distinct fold key
+    (``banks_total``, ``n_rows``) of the launch's ``shape_grid`` (the
+    full grid, so every chunk shares one table shape → one compile).
+    The fold only reads those two counts, so any representative config
+    per key yields the bitwise-identical lookahead.  Cuts the
+    per-*point* ``9·n_steps`` fold/lookahead term of ``bytes_per_point``
+    to a per-*geometry* one (the ROADMAP cross-host perf item)."""
+    def per_geom(gp):
+        fb, fr = fold_address(gp, trace["bank"], trace["row"])
+        return _next_same_folded(shape.envelope.max_banks_total, fb, fr,
+                                 trace["length"])
+    return jax.vmap(per_geom)(ns_geoms)
+
+
+def _hoist_geoms(grid: Sequence[SimConfig],
+                 shape_grid: Sequence[SimConfig]):
+    """Host-side hoist prep for trace-driven sweeps: the stacked
+    distinct-geometry params (keyed over ``shape_grid`` so chunked
+    launches share one table shape) and each launched point's index
+    into them."""
+    keys: list[tuple] = []
+    reps: list[DRAMConfig] = []
+    # shape_grid first so every chunk of one experiment shares the same
+    # (ordered) distinct set; launched-only keys can only appear when a
+    # caller passes an incomplete shape_grid directly
+    for cfg in list(shape_grid) + list(grid):
+        k = (cfg.dram.banks_total, cfg.dram.n_rows)
+        if k not in keys:
+            keys.append(k)
+            reps.append(cfg.dram)
+    idx = [keys.index((cfg.dram.banks_total, cfg.dram.n_rows))
+           for cfg in grid]
+    ns_geoms = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[geom_params(d) for d in reps])
+    return ns_geoms, jnp.asarray(idx, jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4, 5))
@@ -557,27 +611,51 @@ def _run(shape: SimShape, params: MechParams, trace: dict, warmup_steps,
 
 @functools.partial(jax.jit, static_argnums=(0, 4, 5))
 def _run_batched(shape: SimShape, params: MechParams, trace: dict,
-                 warmup_steps, n_steps: int, collect_events: bool = True):
+                 warmup_steps, n_steps: int, collect_events: bool = True,
+                 ns_geoms: GeomParams | None = None, ns_idx=None):
     """The vmapped grid engine: ``params`` leaves carry a leading [grid]
     axis; one compilation of the (single) scan body serves every grid
-    point."""
-    return jax.vmap(
-        lambda p: _run_impl(shape, p, trace, warmup_steps, n_steps,
-                            collect_events))(params)
+    point.
+
+    ``ns_geoms``/``ns_idx`` (from ``_hoist_geoms``) hoist the folded
+    ``next_same`` recompute to one lookahead per distinct geometry: each
+    point gathers its geometry's row of the shared table instead of
+    re-running the reverse scan — bitwise-identical (same function, same
+    folded inputs).  ``None`` falls back to the per-point recompute."""
+    if ns_geoms is None:
+        return jax.vmap(
+            lambda p: _run_impl(shape, p, trace, warmup_steps, n_steps,
+                                collect_events))(params)
+    ns = _ns_tables(shape, trace, ns_geoms)
+
+    def one(p, gi):
+        return _run_impl(shape, p, {**trace, "next_same": ns[gi]},
+                         warmup_steps, n_steps, collect_events)
+    return jax.vmap(one)(params, ns_idx)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4, 5))
 def _run_grid(shape: SimShape, params: MechParams, traces: dict,
-              warmups, n_steps: int, collect_events: bool = False):
+              warmups, n_steps: int, collect_events: bool = False,
+              ns_geoms: GeomParams | None = None, ns_idx=None):
     """The full grid engine: nested vmap over [traces] x [params].
 
     ``traces`` leaves carry a leading [batch] axis, ``warmups`` is [batch],
     ``params`` leaves carry a leading [grid] axis; the single compiled
-    scan body serves every (trace, config) pair."""
+    scan body serves every (trace, config) pair.  ``ns_geoms``/``ns_idx``
+    hoist the ``next_same`` recompute per (trace, distinct geometry)
+    instead of per (trace, point) — see ``_run_batched``."""
     def per_trace(trace, warmup):
-        return jax.vmap(
-            lambda p: _run_impl(shape, p, trace, warmup, n_steps,
-                                collect_events))(params)
+        if ns_geoms is None:
+            return jax.vmap(
+                lambda p: _run_impl(shape, p, trace, warmup, n_steps,
+                                    collect_events))(params)
+        ns = _ns_tables(shape, trace, ns_geoms)
+
+        def one(p, gi):
+            return _run_impl(shape, p, {**trace, "next_same": ns[gi]},
+                             warmup, n_steps, collect_events)
+        return jax.vmap(one)(params, ns_idx)
     return jax.vmap(per_trace)(traces, warmups)
 
 
@@ -619,6 +697,86 @@ def _rltl_post_pass(events: Events):
     return hist, int(valid.sum())
 
 
+def _rltl_device(events: Events):
+    """On-device mirror of ``_rltl_post_pass``: a sorted-segment (per
+    row id) reduction over the event stream, pure JAX — bitwise the host
+    pass (tests/test_simulator.py).
+
+    Instead of host-filtering the empty event slots, they are rewritten
+    to a sentinel row id (maximal, kind=ACT) so the stable lexsort parks
+    them after every live row segment: they can never validate (the
+    sentinel gid is excluded) nor split a live segment.  The grid
+    engines vmap this over their batch axes, so only the
+    ``[len(RLTL_EDGES_MS)+1]`` histogram and a scalar total ever leave
+    the accelerator — the per-step event stream itself (7 int32 arrays
+    × n_steps × grid) stays on device however long the trace is."""
+    gid = jnp.concatenate([events.act_gid, events.pre1_gid,
+                           events.pre2_gid])
+    t = jnp.concatenate([events.act_t, events.pre1_t, events.pre2_t])
+    n = events.act_gid.shape[0]
+    kind = jnp.concatenate([jnp.ones(n, jnp.int8),
+                            jnp.zeros(2 * n, jnp.int8)])  # PRE=0 < ACT=1
+    sent = jnp.int32(2**31 - 1)
+    live = gid >= 0
+    gid = jnp.where(live, gid, sent)
+    kind = jnp.where(live, kind, jnp.int8(1))
+    order = jnp.lexsort((kind, t, gid))
+    gid, t, kind = gid[order], t[order], kind[order]
+    prev_same = jnp.concatenate([jnp.zeros(1, bool), gid[1:] == gid[:-1]])
+    prev_is_pre = jnp.concatenate([jnp.zeros(1, bool), kind[:-1] == 0])
+    valid = (kind == 1) & prev_same & prev_is_pre & (gid != sent)
+    prev_t = jnp.concatenate([t[:1], t[:-1]])
+    intervals = jnp.where(valid, t - prev_t, 0)
+    edges = jnp.asarray([ms_to_cycles(e) for e in RLTL_EDGES_MS],
+                        jnp.int32)
+    bucket = jnp.searchsorted(edges, intervals, side="left").astype(
+        jnp.int32)
+    hist = jnp.zeros(len(RLTL_EDGES_MS) + 1, jnp.int32).at[bucket].add(
+        valid.astype(jnp.int32))
+    return hist, jnp.sum(valid.astype(jnp.int32))
+
+
+@jax.jit
+def _rltl_hist_device(events: Events):
+    """``_rltl_device`` vmapped over however many leading batch axes the
+    engine emitted ([grid] for sweeps, [batch, grid] for sweep_traces)."""
+    fn = _rltl_device
+    for _ in range(events.act_gid.ndim - 1):
+        fn = jax.vmap(fn)
+    return fn(events)
+
+
+def _rltl_np(events: Events | None, on_device: bool | None = None):
+    """The RLTL post-pass, dispatched per backend; returns host views
+    ``(hist [..., B+1] int64, total [...] int64)``.
+
+    On accelerators the segmented pass runs on device
+    (``_rltl_hist_device``) and only the histograms cross to the host —
+    the per-step event streams (7 int32 arrays × n_steps × grid) never
+    leave HBM however long the trace is.  On CPU the host *is* the
+    device, there is no transfer to avoid, and numpy's stable lexsort
+    beats XLA's comparator sort ~8x (measured, BENCH_simstep.json), so
+    the original host pass runs instead.  Both are bitwise-identical
+    (tests/test_simulator.py); ``on_device`` forces one side for
+    tests/benchmarks."""
+    if events is None:
+        return None, None
+    if on_device is None:
+        on_device = jax.default_backend() != "cpu"
+    if on_device:
+        hist, total = _rltl_hist_device(events)
+        return np.asarray(hist).astype(np.int64), \
+            np.asarray(total).astype(np.int64)
+    ev = Events(*(np.asarray(e) for e in events))
+    lead = ev.act_gid.shape[:-1]
+    hist = np.zeros(lead + (len(RLTL_EDGES_MS) + 1,), np.int64)
+    total = np.zeros(lead, np.int64)
+    for idx in np.ndindex(*lead):
+        hist[idx], total[idx] = _rltl_post_pass(
+            Events(*(x[idx] for x in ev)))
+    return hist, total
+
+
 def _device_trace(batch: TraceBatch) -> dict:
     # note: the host-precomputed ``batch.next_same`` is NOT shipped —
     # the engine recomputes the lookahead post-fold (_next_same_folded),
@@ -634,19 +792,18 @@ def _device_trace(batch: TraceBatch) -> dict:
     }
 
 
-def _finalize(raw_stats: dict, core_end, events: Events | None,
+def _finalize(raw_stats: dict, core_end, rltl: tuple,
               lengths: np.ndarray, cfg: SimConfig | None = None) -> dict:
     """Host-side post-processing shared by ``simulate``/``sweep`` (which
     pass the batch's per-core lengths) and the streamed-generation path
     (which knows them from the ``WorkloadSpec`` — no ``TraceBatch``
-    exists there)."""
+    exists there).  ``rltl`` is this point's ``(hist, total)`` from the
+    on-device post-pass (``_rltl_np``), or ``(None, None)`` when the run
+    was collected without events."""
     stats = {k: np.asarray(v) for k, v in raw_stats.items()}
-    if events is not None:
-        hist, rltl_total = _rltl_post_pass(events)
-    else:
-        hist, rltl_total = None, None  # run was collected without events
-    stats["rltl_hist"] = hist
-    stats["rltl_total"] = rltl_total
+    hist, rltl_total = rltl
+    stats["rltl_hist"] = None if hist is None else np.asarray(hist)
+    stats["rltl_total"] = None if rltl_total is None else int(rltl_total)
     stats["core_end"] = np.asarray(core_end)
     stats["total_cycles"] = int(stats["core_end"].max())
     stats["n_cores"] = int(np.asarray(lengths).shape[0])
@@ -683,7 +840,8 @@ def simulate(batch: TraceBatch, cfg: SimConfig = SimConfig()) -> dict:
     warmup = jnp.int32(int(cfg.warmup_frac * n_steps))
     raw_stats, core_end, events = _run(sim_shape(cfg), mech_params(cfg),
                                        trace, warmup, n_steps)
-    return _finalize(raw_stats, core_end, events, batch.length, cfg)
+    return _finalize(raw_stats, core_end, _rltl_np(events), batch.length,
+                     cfg)
 
 
 def _shard_grid(stacked: MechParams, n_grid: int):
@@ -708,6 +866,17 @@ def _shard_grid(stacked: MechParams, n_grid: int):
     stacked = jax.tree_util.tree_map(
         lambda x: jax.device_put(x, sharding), stacked)
     return stacked, n_grid + pad
+
+
+def _uniform_backend(grid: Sequence[SimConfig]) -> str:
+    """The engine tier of a launch.  A single vmapped/kernelized launch
+    runs every point through one engine, so mixing tiers inside one grid
+    is a caller error, not something to silently split."""
+    backend = grid[0].backend
+    assert all(cfg.backend == backend for cfg in grid), (
+        "a sweep grid must share one backend (split the grid to compare "
+        "engine tiers)")
+    return backend
 
 
 def _grid_shape_and_params(grid: Sequence[SimConfig],
@@ -775,20 +944,29 @@ def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
     n_steps = n_cores * max_len if pad_steps else n_req
     warmup = jnp.int32(int(grid[0].warmup_frac * n_req))
 
+    # one lookahead per *distinct* geometry (host-known here), gathered
+    # per point inside the engines — see _hoist_geoms/_ns_tables
+    ns_geoms, ns_idx = _hoist_geoms(
+        grid, shape_grid if shape_grid is not None else grid)
+
     n_grid = len(grid)
-    stacked, _ = _shard_grid(stacked, n_grid)
-    raw_stats, core_end, events = _run_batched(shape, stacked, trace,
-                                               warmup, n_steps, rltl)
+    if _uniform_backend(grid) == "pallas":
+        from repro.kernels.sim_step import ops as sim_step_ops
+        raw_stats, core_end, events = sim_step_ops.run_sweep(
+            shape, stacked, trace, warmup, n_steps, rltl, ns_geoms, ns_idx)
+    else:
+        (stacked, ns_idx), _ = _shard_grid((stacked, ns_idx), n_grid)
+        raw_stats, core_end, events = _run_batched(
+            shape, stacked, trace, warmup, n_steps, rltl, ns_geoms, ns_idx)
 
     # one device->host transfer for the whole grid, then per-point views
     stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}
     core_np = np.asarray(core_end)
-    events_np = (Events(*(np.asarray(e) for e in events))
-                 if events is not None else None)
+    hist_np, total_np = _rltl_np(events)
     return [
         _finalize({k: v[g] for k, v in stats_np.items()}, core_np[g],
-                  Events(*(e[g] for e in events_np))
-                  if events_np is not None else None, batch.length, grid[g])
+                  (None, None) if hist_np is None
+                  else (hist_np[g], total_np[g]), batch.length, grid[g])
         for g in range(n_grid)
     ]
 
@@ -829,23 +1007,32 @@ def sweep_traces(batches: Sequence[TraceBatch], grid: Sequence[SimConfig],
         [int(grid[0].warmup_frac * int(b.length.sum())) for b in batches],
         jnp.int32)
 
+    # trace batches are the outer vmap axis here, which the sim_step
+    # kernel's sweep-batch grid doesn't model — the nested-matrix entry
+    # stays on the authoritative ref engine (DESIGN.md §11)
+    assert _uniform_backend(grid) == "ref", (
+        "sweep_traces runs the ref engine only; use sweep() per batch "
+        "for the pallas tier")
+    ns_geoms, ns_idx = _hoist_geoms(
+        grid, shape_grid if shape_grid is not None else grid)
+
     n_batch = len(batches)
     (traces, warmups), _ = _shard_grid((traces, warmups), n_batch)
     raw_stats, core_end, events = _run_grid(shape, stacked, traces,
-                                            warmups, n_steps, rltl)
+                                            warmups, n_steps, rltl,
+                                            ns_geoms, ns_idx)
 
     stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}  # [B, G]
     core_np = np.asarray(core_end)
-    events_np = (Events(*(np.asarray(e) for e in events))
-                 if events is not None else None)
+    hist_np, total_np = _rltl_np(events)
     out = []
     for b in range(n_batch):
         row = []
         for g in range(len(grid)):
-            ev = (Events(*(e[b, g] for e in events_np))
-                  if events_np is not None else None)
+            rl = ((None, None) if hist_np is None
+                  else (hist_np[b, g], total_np[b, g]))
             row.append(_finalize({k: v[b, g] for k, v in stats_np.items()},
-                                 core_np[b, g], ev, batches[b].length,
+                                 core_np[b, g], rl, batches[b].length,
                                  grid[g]))
         out.append(row)
     return out
@@ -941,20 +1128,25 @@ def sweep_synth(grid: Sequence[SimConfig], rltl: bool = True,
          for cfg in grid], jnp.int32)
 
     n_grid = len(grid)
-    (stacked, wstack, ilstack, warmups), _ = _shard_grid(
-        (stacked, wstack, ilstack, warmups), n_grid)
-    raw_stats, core_end, events = _run_synth_batched(
-        shape, n_cores, max_len, stacked, wstack, ilstack, warmups,
-        n_steps, rltl)
+    if _uniform_backend(grid) == "pallas":
+        from repro.kernels.sim_step import ops as sim_step_ops
+        raw_stats, core_end, events = sim_step_ops.run_synth(
+            shape, n_cores, max_len, stacked, wstack, ilstack, warmups,
+            n_steps, rltl)
+    else:
+        (stacked, wstack, ilstack, warmups), _ = _shard_grid(
+            (stacked, wstack, ilstack, warmups), n_grid)
+        raw_stats, core_end, events = _run_synth_batched(
+            shape, n_cores, max_len, stacked, wstack, ilstack, warmups,
+            n_steps, rltl)
 
     stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}
     core_np = np.asarray(core_end)
-    events_np = (Events(*(np.asarray(e) for e in events))
-                 if events is not None else None)
+    hist_np, total_np = _rltl_np(events)
     return [
         _finalize({k: v[g] for k, v in stats_np.items()}, core_np[g],
-                  Events(*(e[g] for e in events_np))
-                  if events_np is not None else None,
+                  (None, None) if hist_np is None
+                  else (hist_np[g], total_np[g]),
                   grid[g].workload.lengths(), grid[g])
         for g in range(n_grid)
     ]
@@ -965,9 +1157,12 @@ def simulate_synth(cfg: SimConfig) -> dict:
     selects the profiles; ``cfg.interleave`` the channel map).  The
     single-point view of ``sweep_synth`` — bitwise-identical to
     ``simulate(materialize(cfg.workload, cfg.dram, cfg.interleave),
-    cfg)``, the materialized-trace path."""
+    cfg)``, the materialized-trace path.  Always runs the authoritative
+    ref engine (the single-point *oracle*; ``cfg.backend`` only routes
+    the batched entries)."""
     assert cfg.workload is not None, "simulate_synth needs cfg.workload"
-    return sweep_synth([cfg], rltl=True)[0]
+    return sweep_synth([dataclasses.replace(cfg, backend="ref")],
+                       rltl=True)[0]
 
 
 def weighted_speedup(core_end_base: np.ndarray, core_end_mech: np.ndarray,

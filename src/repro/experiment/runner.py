@@ -105,11 +105,18 @@ def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
     per += n_sets_max * n_ways * 3 * 4 * 2
     per += (8 * n_banks_total + 2 * n_channels) * 4 * 2
     per += n_cores * (mshr + 8) * 4
-    per += 9 * n_steps  # folded (bank, row) + next_same, per point
     if synth:
         # generated stream + the scan's materialized candidate-draw xs
-        # (three f32 + five int32 per step) + masked output copies
-        per += 56 * n_steps
+        # (three f32 + five int32 per step) + masked output copies,
+        # plus the per-point folded (bank, row) copies + recomputed
+        # next_same lookahead (each point generates for its own
+        # geometry, so there is nothing to hoist)
+        per += (56 + 9) * n_steps
+    else:
+        # trace-driven launches hoist the fold + next_same recompute to
+        # one table per *distinct* geometry (simulator._hoist_geoms);
+        # each point only materializes its gathered bool view
+        per += n_steps
     if rltl:
         per += 7 * 4 * n_steps
     return per * max(1, n_traces)

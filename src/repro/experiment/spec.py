@@ -149,6 +149,18 @@ def _axis_policy(cfg: SimConfig, policy: str) -> SimConfig:
     return dataclasses.replace(cfg, policy=policy)
 
 
+@register_axis("backend")
+def _axis_backend(cfg: SimConfig, backend: str) -> SimConfig:
+    """Engine tier (DESIGN.md §11): ``"ref"`` (the authoritative
+    ``lax.scan`` engine, the default) or ``"pallas"`` (the
+    ``kernels.sim_step`` grid kernel — bitwise-identical by contract).
+    Usually set on ``base`` rather than swept; a swept backend axis is
+    the A/B harness ``benchmarks/simstep_bench.py`` uses.  Grids must be
+    backend-uniform, so a swept backend combines only with
+    ``chunk_size=1`` or a per-backend ``Experiment``."""
+    return dataclasses.replace(cfg, backend=backend)
+
+
 @register_axis("timing")
 def _axis_timing(cfg: SimConfig, timing) -> SimConfig:
     return dataclasses.replace(cfg, timing=timing)

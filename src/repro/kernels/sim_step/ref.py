@@ -1,0 +1,21 @@
+"""The authoritative reference tier of the sim-step kernel.
+
+Per the repo's kernel-package contract, ``ref.py`` is the oracle the
+kernel is tested against.  For sim_step the oracle *is* the engine the
+simulator has always run — the jitted, vmapped ``lax.scan`` over
+requests — so this module is a named re-export rather than a rewrite:
+there is exactly one definition of the step semantics
+(``simulator._make_step`` / ``_service``), and the Pallas tier wraps
+that same body in a grid launch.  ``ref`` stays the ``SimConfig``
+default backend; ``backend="pallas"`` is the opt-in fast path
+(DESIGN.md §11).
+"""
+
+from __future__ import annotations
+
+from repro.core.simulator import _run_batched as run_sweep_ref  # noqa: F401
+from repro.core.simulator import (  # noqa: F401
+    _run_synth_batched as run_synth_ref,
+)
+
+__all__ = ["run_sweep_ref", "run_synth_ref"]

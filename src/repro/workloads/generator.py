@@ -66,7 +66,8 @@ __all__ = ["generate", "materialize"]
  _L_RBANK, _L_RROW, _L_HOTBANK, _L_HOTROW, _L_B0, _L_STRIDE,
  _L_PICK2) = prng.lanes(14)
 
-_MAX_GAP = jnp.int32(1 << 20)  # int32 cycle-horizon guard on the tail
+# np scalar so Pallas kernel bodies may close over it (see dram.NO_ROW)
+_MAX_GAP = np.int32(1 << 20)  # int32 cycle-horizon guard on the tail
 
 #: recency-ring depth: stack ranks 1..RECENT_RING resolve to the most
 #: recent distinct rows (the move-to-front burst window); deeper ranks

@@ -4,6 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from _hypo import given, settings, st  # hypothesis, or deterministic fallback
 
 RNG = np.random.default_rng(0)
 
@@ -81,6 +82,125 @@ def test_ssm_scan(B, T, D, Nst, block_d):
     h_r, y_r = ssm_scan_ref(decay, dbu, c, h0)
     np.testing.assert_allclose(np.asarray(h_k), np.asarray(h_r), atol=1e-4)
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r), atol=1e-4)
+
+
+# ---------------------------------------------------------------------
+# sim_step: the simulator hot loop as a Pallas grid kernel (DESIGN.md
+# §11).  On CPU the kernel runs in interpret mode, so parity here is
+# the *contract* check (ref.py stays the oracle); compiled-mode parity
+# on an accelerator rides the same tests.
+
+
+def _simstep_parity_helpers():
+    import dataclasses
+
+    from _parity import assert_cell_matches
+    from repro.core import DRAMConfig, MechanismConfig, SimConfig
+    return dataclasses, assert_cell_matches, DRAMConfig, MechanismConfig, \
+        SimConfig
+
+
+def test_sim_step_sweep_parity_every_mechanism():
+    """ACCEPTANCE: ``backend='pallas'`` sweep (VMEM-resident bank-state
+    step, grid-parallel over points) is bitwise-identical to per-config
+    ``simulate()`` for EVERY registered mechanism kind across two DRAM
+    geometries, RLTL histogram included."""
+    dataclasses, assert_cell_matches, DRAMConfig, MechanismConfig, \
+        SimConfig = _simstep_parity_helpers()
+    from repro.core import simulate, sweep
+    from repro.core.traces import single_core_batch
+    from repro.experiment import registry
+    batch = single_core_batch("milc_like", 1400, seed=5)
+    geoms = (DRAMConfig(n_channels=1),
+             DRAMConfig(n_channels=2, n_banks=16))
+    grid = [SimConfig(dram=g, mech=MechanismConfig(kind=k),
+                      backend="pallas")
+            for g in geoms for k in registry.names()]
+    swept = sweep(batch, grid)
+    for cfg, got in zip(grid, swept):
+        ref = simulate(batch, dataclasses.replace(cfg, backend="ref"))
+        assert_cell_matches(ref, got, rltl=True)
+
+
+def test_sim_step_fused_synth_matches_streamed_ref():
+    """The PR-5 workload generator fused into the kernel step
+    (``sweep_synth(backend='pallas')``) is bitwise-identical to the
+    streamed ref engine — generation + simulation semantics are defined
+    once (``_run_synth_impl``) and only the launch tier differs."""
+    dataclasses, assert_cell_matches, _DRAMConfig, MechanismConfig, \
+        SimConfig = _simstep_parity_helpers()
+    from repro.core import WorkloadSpec, sweep_synth
+    spec = WorkloadSpec(names=("milc_like", "mcf_like"), n_req=900, seed=7)
+
+    def grid(backend):
+        return [SimConfig(mech=MechanismConfig(kind=k), policy="closed",
+                          workload=spec, backend=backend)
+                for k in ("base", "chargecache", "cc_nuat")]
+
+    for r, g in zip(sweep_synth(grid("ref"), rltl=True),
+                    sweep_synth(grid("pallas"), rltl=True)):
+        assert_cell_matches(r, g, rltl=True)
+
+
+def test_sim_step_kernel_output_shapes_match_ref_engine():
+    """``ops.run_sweep`` returns the exact grid-stacked pytree structure
+    and leaf shapes/dtypes of the ref engine (``_run_batched``) — the
+    kernel is a drop-in launch tier, not a different data contract."""
+    dataclasses, _acm, DRAMConfig, MechanismConfig, SimConfig = \
+        _simstep_parity_helpers()
+    import jax.numpy as jnp
+
+    from repro.core import simulator as sim_mod
+    from repro.core.traces import single_core_batch
+    from repro.kernels.sim_step import ops as sim_step_ops
+    batch = single_core_batch("mcf_like", 700, seed=2)
+    grid = [SimConfig(dram=DRAMConfig(n_channels=c),
+                      mech=MechanismConfig(kind="chargecache"))
+            for c in (1, 2)]
+    shape, stacked = sim_mod._grid_shape_and_params(grid, None)
+    trace = sim_mod._device_trace(batch)
+    n_steps = int(batch.length.sum())
+    warmup = jnp.int32(0)
+    ref = sim_mod._run_batched(shape, stacked, trace, warmup, n_steps,
+                               True)
+    got = sim_step_ops.run_sweep(shape, stacked, trace, warmup, n_steps,
+                                 True)
+    ref_l, ref_def = jax.tree_util.tree_flatten(ref)
+    got_l, got_def = jax.tree_util.tree_flatten(got)
+    assert ref_def == got_def
+    for r, g in zip(ref_l, got_l):
+        assert r.shape == g.shape and r.dtype == g.dtype, (r, g)
+
+
+@pytest.mark.parametrize("nb,nch", [(4, 1), (8, 2), (16, 1)])
+def test_property_sim_step_bank_accumulators_envelope_masked(nb, nch):
+    """Per-bank accumulators stay masked to the point's *active*
+    geometry under the Pallas tier: a point folded onto ``nb*nch`` banks
+    inside a 32-bank padded envelope must leave every padding bank at
+    exactly zero, and the per-bank counts must sum to the scalar
+    ``acts`` accumulator (no act escapes the mask)."""
+    dataclasses, _acm, DRAMConfig, MechanismConfig, SimConfig = \
+        _simstep_parity_helpers()
+    from repro.core import sweep
+    from repro.core.traces import single_core_batch
+
+    @settings(deadline=None, max_examples=4)
+    @given(st.integers(0, 2**16 - 1))
+    def check(seed):
+        batch = single_core_batch("mcf_like", 600, seed=seed)
+        geom = DRAMConfig(n_channels=nch, n_banks=nb)
+        envelope = DRAMConfig(n_channels=2, n_banks=16)  # 32-bank pad
+        got = sweep(batch, [
+            SimConfig(dram=geom, mech=MechanismConfig(kind="chargecache"),
+                      backend="pallas"),
+            SimConfig(dram=envelope, mech=MechanismConfig(kind="base"),
+                      backend="pallas")], rltl=False)[0]
+        acts = got["bank_acts"]
+        assert acts.shape[0] == envelope.banks_total
+        assert int(np.abs(acts[geom.banks_total:]).sum()) == 0
+        assert int(acts.sum()) == int(got["acts"])
+
+    check()
 
 
 def test_hcrac_kernel_vs_ref_and_sequential():

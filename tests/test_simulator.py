@@ -115,6 +115,34 @@ def test_rltl_captures_conflict_ping_pong():
     assert s["acts_lowered_frac"] > 0.95
 
 
+def test_rltl_device_pass_matches_host_bitwise():
+    """SATELLITE (PR 6): the on-device RLTL post-pass (sentinel-keyed
+    stable lexsort over the event stream, ``_rltl_device``) is bitwise-
+    identical to the host matcher (``_rltl_post_pass``) on real event
+    streams — per point of a mixed mechanism/policy grid.  ``_rltl_np``
+    dispatches between the two by backend (host numpy wins on CPU,
+    measured ~8x — see its docstring); this pins both arms to one
+    result so the dispatch is a pure perf choice."""
+    import jax.numpy as jnp
+
+    from repro.core import simulator as sim_mod
+    from repro.core import sweep
+    batch = multicore_batch(["milc_like", "mcf_like"], 1500, seed=3)
+    grid = [SimConfig(mech=MechanismConfig(kind=k), policy="closed")
+            for k in ("base", "rltl", "chargecache")]
+    shape, stacked = sim_mod._grid_shape_and_params(grid, None)
+    trace = sim_mod._device_trace(batch)
+    n_steps = int(batch.length.sum())
+    warmup = jnp.int32(int(grid[0].warmup_frac * n_steps))
+    _st, _ce, ev = sim_mod._run_batched(shape, stacked, trace, warmup,
+                                        n_steps, True)
+    dev_h, dev_t = sim_mod._rltl_np(ev, on_device=True)
+    host_h, host_t = sim_mod._rltl_np(ev, on_device=False)
+    assert np.array_equal(dev_h, host_h)
+    assert np.array_equal(dev_t, host_t)
+    assert dev_h.shape == (len(grid), 10) and int(dev_h.sum()) > 0
+
+
 def test_multicore_weighted_speedup_sane():
     batch = multicore_batch(["milc_like", "soplex_like", "lbm_like",
                              "gcc_like"], 3000)

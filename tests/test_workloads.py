@@ -319,9 +319,12 @@ def _assert_profile_parity(name: str, n_req: int):
     assert abs(o_ref - o_syn) <= 0.10, (name, o_ref, o_syn)
 
 
+@pytest.mark.slow
 def test_statistical_parity_smoke():
-    """Fast tier: two contrasting profiles (hot-set thrasher and
-    streamer); the full 22-profile suite is the slow tier."""
+    """Nightly tier (PR 6 moved it out of the per-push run: the
+    occupancy resimulation dominated fast-tier wall time and the full
+    22-profile suite below covers the same generator): two contrasting
+    profiles (hot-set thrasher and streamer)."""
     for name in ("milc_like", "stream_copy_like"):
         _assert_profile_parity(name, 2500)
 
