@@ -106,9 +106,11 @@ def compile_counted(fn, *args, **kw):
     benchmark's "this whole study rides ONE compilation" assertion."""
     from repro.core import simulator as sim_mod
     from repro.kernels.sim_step import ops as sim_step_ops
+    from repro.serving.loop import engine as serve_eng
     engines = (sim_mod._run_grid, sim_mod._run_batched,
                sim_mod._run_synth_batched,
-               sim_step_ops._sweep_pallas, sim_step_ops._synth_pallas)
+               sim_step_ops._sweep_pallas, sim_step_ops._synth_pallas,
+               serve_eng._run_serving_batched, serve_eng._run_serving_pinned)
     before = [e._cache_size() for e in engines]
     out = fn(*args, **kw)
     compiles = sum(e._cache_size() - b

@@ -55,8 +55,8 @@ def _record(results: dict, row: str) -> None:
 def main() -> None:
     from benchmarks import (aldram, capacity, charge_model_bench, duration,
                             energy, geometry, kernels_bench, rltl,
-                            roofline_bench, serving_trace, simstep_bench,
-                            speedup, sweep_bench, workloads)
+                            roofline_bench, serving_loop, serving_trace,
+                            simstep_bench, speedup, sweep_bench, workloads)
     # (name, module, declared BENCH_* artifacts the module must emit)
     mods = [
         ("charge_model", charge_model_bench, ()),
@@ -71,6 +71,7 @@ def main() -> None:
         ("workloads", workloads, ("BENCH_workloads.json",)),
         ("simstep", simstep_bench, ("BENCH_simstep.json",)),
         ("serving", serving_trace, ()),
+        ("serving_loop", serving_loop, ("BENCH_serving.json",)),
         ("kernels", kernels_bench, ()),
         ("roofline", roofline_bench, ()),
     ]

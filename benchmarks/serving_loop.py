@@ -1,0 +1,158 @@
+"""The fully-traced serving closed loop at scale (DESIGN.md §12).
+
+Three claims, one ``BENCH_serving.json``:
+
+1. **One compile, four axes** — a policy × arrival_rate × burstiness ×
+   mechanism serving grid through ``Experiment(traces=None)`` rides
+   exactly ONE XLA compilation (asserted — the ISSUE acceptance
+   criterion), with every request stream drawn on device.
+2. **Charge-aware admission pays** — the traced charge predictor lifts
+   the admission hot rate over FIFO at every (rate, burstiness) point.
+3. **Throughput** — the compiled scan against the host scheduler at
+   10⁴ and 10⁵ requests (QUICK: 10³ / 5·10³): the traced loop amortizes
+   to sub-host-µs per request with ZERO host trace materialization —
+   the host path exists only as the parity oracle.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.simulator import SimConfig, simulate_serving
+from repro.experiment import Experiment
+from repro.serving.loop import ServingSpec
+from repro.serving.loop.oracle import run_host
+from repro.workloads.arrivals import ArrivalConfig, arrival_params, step_counts
+
+SERVING_JSON = C.artifact_path(
+    os.environ.get("REPRO_BENCH_SERVING_JSON", "BENCH_serving.json"))
+
+POLICIES = ("fifo", "charge_aware", "preempting")
+RATES = (1.0, 3.0)
+BURSTS = (1.0,) if C.QUICK else (1.0, 4.0)
+MECHS = ("base", "chargecache")
+
+GRID_REQS = 64 if C.QUICK else 256
+SCALE_NS = (1_000, 5_000) if C.QUICK else (10_000, 100_000)
+HOST_REQS = 96 if C.QUICK else 384
+
+
+def _spec(n_reqs: int, rate: float = 8.0, max_batch: int = 8,
+          policy: str = "charge_aware") -> ServingSpec:
+    return ServingSpec(
+        policy=policy,
+        arrival=ArrivalConfig(rate=rate, burstiness=2.0,
+                              prompt_pages_min=1, prompt_pages_max=2,
+                              decode_min=4, decode_max=8, seed=11),
+        n_reqs=n_reqs, max_batch=max_batch,
+        queue_cap=4 * max_batch, arrivals_max=max_batch,
+        cycles_per_step=4000,
+        hot_entries=1024, hot_ways=2, hot_caching_ms=0.05, hot_exact=True)
+
+
+def grid() -> tuple:
+    """The 4-axis acceptance grid: the whole policy study, one compile."""
+    base = SimConfig(mech=C.mech_config("base"),
+                     serving=_spec(GRID_REQS, rate=1.0, policy="fifo"))
+    exp = Experiment(
+        traces=None,
+        axes={"policy": list(POLICIES), "arrival_rate": list(RATES),
+              "burstiness": list(BURSTS), "mechanism": list(MECHS)},
+        base=base)
+    return C.compile_counted(exp.run)
+
+
+def scale_points() -> dict:
+    """Traced throughput at growing stream lengths (whole closed loop —
+    arrivals, scheduling, KV charge AND the DRAM mechanism — per
+    request).  Wall time includes the one compilation; the larger
+    stream amortizes it."""
+    out = {}
+    for n in SCALE_NS:
+        spec = _spec(n, rate=8.0, max_batch=32)
+        res, us = C.timed(simulate_serving, SimConfig(serving=spec),
+                          collect_steps=False)
+        assert res["retired"] == n, (
+            f"stream must drain: {res['retired']}/{n} retired")
+        out[n] = {"wall_us": us, "us_per_req": us / n,
+                  "n_steps": res["n_steps"], "retired": res["retired"],
+                  "admit_hot_rate": res["admit_hot_rate"]}
+    return out
+
+
+def host_baseline() -> dict:
+    """The host scheduler on the same arrival law (the parity oracle,
+    promoted to a throughput baseline)."""
+    spec = _spec(HOST_REQS, rate=8.0, max_batch=32)
+    ap = arrival_params(spec.arrival, spec.n_reqs, xp=np)
+    counts = step_counts(np, ap, np.arange(spec.steps(), dtype=np.int32))
+    (sched, _), us = C.timed(run_host, spec, counts)
+    assert sched.stats["retired"] == HOST_REQS
+    return {"wall_us": us, "us_per_req": us / HOST_REQS,
+            "n_reqs": HOST_REQS}
+
+
+def run() -> list[str]:
+    (res, compiles), grid_us = C.timed(grid)
+    assert compiles == 1, (
+        f"the policy x arrival x burstiness x mechanism serving grid "
+        f"must ride one compilation, got {compiles}")
+    n_pts = res.meta["n_points"]
+
+    by_policy = {}
+    for pol in POLICIES:
+        cells = [res.point(policy=pol, arrival_rate=r, burstiness=b,
+                           mechanism="chargecache")
+                 for r in RATES for b in BURSTS]
+        assert all(c["retired"] == GRID_REQS for c in cells), pol
+        by_policy[pol] = {
+            "admit_hot_rate": float(np.mean(
+                [c["admit_hot_rate"] for c in cells])),
+            "preempted": int(sum(c["preempted"] for c in cells)),
+            "hcrac_hit_rate": float(np.mean(
+                [c["hcrac_hit_rate"] for c in cells])),
+        }
+    # claim 2: predicted-charge admission beats FIFO on admission heat
+    assert (by_policy["charge_aware"]["admit_hot_rate"]
+            > by_policy["fifo"]["admit_hot_rate"]), by_policy
+
+    scale = scale_points()
+    host = host_baseline()
+    big = max(SCALE_NS)
+    ratio = host["us_per_req"] / max(scale[big]["us_per_req"], 1e-9)
+
+    doc = {
+        "grid": {"compiles": compiles, "wall_us": grid_us,
+                 "by_policy": by_policy, "meta": res.meta},
+        "scale": {str(n): v for n, v in scale.items()},
+        "host": host,
+        "host_over_traced_us_per_req": ratio,
+        "cells": res.to_table(),
+    }
+    with open(SERVING_JSON, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+
+    f_, a_ = by_policy["fifo"], by_policy["charge_aware"]
+    return [
+        C.csv_row(
+            "serving_grid", grid_us,
+            f"compiles={compiles};points={n_pts}"
+            f";fifo_hot={f_['admit_hot_rate']:.3f}"
+            f";ca_hot={a_['admit_hot_rate']:.3f}"
+            f";preempted={by_policy['preempting']['preempted']}"),
+        C.csv_row(
+            "serving_scale", scale[big]["wall_us"],
+            ";".join(f"N{n}_us_per_req={v['us_per_req']:.2f}"
+                     for n, v in scale.items())
+            + f";host_us_per_req={host['us_per_req']:.2f}"
+            + f";host_over_traced={ratio:.1f}"),
+    ]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

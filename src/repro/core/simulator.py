@@ -120,10 +120,18 @@ class SimConfig:
     #: ``simulate()`` / ``simulate_synth()`` are the single-point
     #: *reference* views and always run the ref engine.
     backend: str = "ref"
+    #: serving-loop selection (a ``repro.serving.loop.ServingSpec``) for
+    #: the fused continuous-batching path (``simulate_serving`` /
+    #: ``sweep_serving``, DESIGN.md §12); ``None`` means trace- or
+    #: workload-driven as above
+    serving: object | None = None
 
     def __post_init__(self):
         assert self.policy in ("open", "closed")
         assert self.backend in ("ref", "pallas"), self.backend
+        if self.serving is not None:
+            assert self.backend == "ref", (
+                "the serving loop runs the ref engine only")
 
 
 # --------------------------------------------------------------------------
@@ -1163,6 +1171,29 @@ def simulate_synth(cfg: SimConfig) -> dict:
     assert cfg.workload is not None, "simulate_synth needs cfg.workload"
     return sweep_synth([dataclasses.replace(cfg, backend="ref")],
                        rltl=True)[0]
+
+
+def sweep_serving(grid: Sequence[SimConfig],
+                  shape_grid: Sequence[SimConfig] | None = None,
+                  counts=None, collect_steps: bool = False) -> list[dict]:
+    """Evaluate a *serving* config grid — every ``cfg.serving`` set —
+    as one fused continuous-batching scan per point, vmapped across the
+    grid (DESIGN.md §12).  The serving sibling of ``sweep_synth``; the
+    engine lives in ``repro.serving.loop`` (which imports this core
+    layer), imported lazily to keep the module graph acyclic."""
+    from repro.serving.loop import engine
+    return engine.run_sweep(grid, shape_grid=shape_grid, counts=counts,
+                            collect_steps=collect_steps)
+
+
+def simulate_serving(cfg: SimConfig, counts=None,
+                     collect_steps: bool = True) -> dict:
+    """One serving grid point, fused end to end (single-point view of
+    ``sweep_serving``; per-step occupancy/queue arrays collected by
+    default)."""
+    from repro.serving.loop import engine
+    return engine.simulate_serving(cfg, counts=counts,
+                                   collect_steps=collect_steps)
 
 
 def weighted_speedup(core_end_base: np.ndarray, core_end_mech: np.ndarray,

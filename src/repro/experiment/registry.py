@@ -17,3 +17,16 @@ from repro.core.mechanisms import *  # noqa: F401,F403
 from repro.core.mechanisms import (  # noqa: F401  (non-public helpers)
     block_bearing, build_blocks, canonical_mech, components, get,
     hcrac_gate, names, pad_hints, select_timings, temporary)
+
+#: serving-policy registration is part of the same front door, but the
+#: serving loop lives above the core layer — re-export lazily so
+#: importing the mechanism registry never pulls in the serving engine
+_SERVING = ("register_policy", "serving_policy_names")
+
+
+def __getattr__(name):
+    if name in _SERVING:
+        from repro.serving.loop import policies as _pol
+        return {"register_policy": _pol.register_policy,
+                "serving_policy_names": _pol.names}[name]
+    raise AttributeError(name)

@@ -38,7 +38,8 @@ import jax
 import numpy as np
 
 from repro.core.dram import InterleaveConfig
-from repro.core.simulator import SimConfig, sweep, sweep_synth, sweep_traces
+from repro.core.simulator import (SimConfig, sweep, sweep_serving,
+                                  sweep_synth, sweep_traces)
 from repro.core.traces import pad_batch_to
 from repro.experiment import registry
 from repro.experiment.results import Results
@@ -48,22 +49,25 @@ from repro.experiment.spec import Experiment
 DEFAULT_BUDGET_MB = 1024.0
 
 
-def _canonical(cfg: SimConfig, synth: bool) -> SimConfig:
+def _canonical(cfg: SimConfig, mode: str) -> SimConfig:
     cfg = dataclasses.replace(cfg, mech=registry.canonical_mech(cfg.mech))
-    if not synth:
-        # the workload spec and interleave policy are only consumed by
-        # the streamed-generation engine: on a trace-driven experiment
-        # they are inert, so points differing only there dedup
-        cfg = dataclasses.replace(cfg, workload=None,
-                                  interleave=InterleaveConfig())
-    elif cfg.dram.n_channels == 1:
-        # with one active channel every interleave policy degenerates
-        # to the identity (dram.compose_address) — dedup the axis
-        cfg = dataclasses.replace(cfg, interleave=InterleaveConfig())
+    if mode == "synth":
+        if cfg.dram.n_channels == 1:
+            # with one active channel every interleave policy degenerates
+            # to the identity (dram.compose_address) — dedup the axis
+            cfg = dataclasses.replace(cfg, interleave=InterleaveConfig())
+        return cfg
+    # trace-driven and serving launches never consume the workload spec
+    # or interleave policy — points differing only there dedup
+    cfg = dataclasses.replace(cfg, workload=None,
+                              interleave=InterleaveConfig())
+    if mode == "serving":
+        # knobs only read by disabled serving policies dedup too
+        cfg = dataclasses.replace(cfg, serving=cfg.serving.canonical())
     return cfg
 
 
-def _dedup(configs: list[SimConfig], enable: bool, synth: bool):
+def _dedup(configs: list[SimConfig], enable: bool, mode: str):
     """Unique canonical configs + flat-index → unique-index map."""
     if not enable:
         return list(configs), list(range(len(configs)))
@@ -71,7 +75,7 @@ def _dedup(configs: list[SimConfig], enable: bool, synth: bool):
     where: dict = {}
     index_map = []
     for cfg in configs:
-        key = _canonical(cfg, synth)
+        key = _canonical(cfg, mode)
         if key not in where:
             where[key] = len(unique)
             unique.append(key)
@@ -123,13 +127,16 @@ def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
 
 
 def _auto_chunk(unique: list[SimConfig], groups, rltl: bool,
-                budget_mb: float | None) -> int:
+                budget_mb: float | None, mode: str = "trace") -> int:
     """Largest device-aligned chunk fitting the per-device budget.
 
     ``groups`` holds the trace batches (trace-driven mode); when it is
     empty the grid is synthetic and the stream dimensions come from the
     configs' ``WorkloadSpec``s instead (``bytes_per_point(synth=True)``
-    — each point owns its generated stream)."""
+    — each point owns its generated stream).  A *serving* grid
+    (``mode="serving"``) is estimated from its own carry: the hot-page
+    table, the queue/slot arrays, and the drawn per-step arrival
+    counts."""
     budget_mb = (budget_mb if budget_mb is not None else
                  float(os.environ.get("REPRO_EXP_BUDGET_MB",
                                       DEFAULT_BUDGET_MB)))
@@ -147,7 +154,17 @@ def _auto_chunk(unique: list[SimConfig], groups, rltl: bool,
             n_ways=n_ways, n_cores=n_cores, mshr=unique[0].mshr,
             n_traces=len(batches), rltl=rltl,
             n_banks_total=n_banks_max, n_channels=n_ch_max))
-    if not groups:  # synthetic grid: no host traces, per-point streams
+    if mode == "serving":  # fused serving scan: its own carry model
+        sp = [c.serving for c in unique]
+        per = 4096
+        per += n_sets_max * n_ways * 3 * 4 * 2            # controller HCRAC
+        per += max(s.hot_cfg().n_sets for s in sp) \
+            * sp[0].hot_ways * 3 * 4 * 2                  # hot-page table
+        per += (8 * n_banks_max + 2 * n_ch_max) * 4 * 2   # bank/bus carry
+        per += (6 * sp[0].queue_cap + 4 * sp[0].max_batch) * 4 * 2
+        per += 4 * max(s.steps() for s in sp)             # drawn counts xs
+        worst = per
+    elif not groups:  # synthetic grid: no host traces, per-point streams
         from repro.workloads.profiles import max_len_of
         n_cores = unique[0].workload.n_cores
         max_len = max_len_of([c.workload for c in unique])
@@ -169,9 +186,18 @@ def run_experiment(exp: Experiment, progress=None) -> Results:
     cfg_dims, cfg_coords, configs = exp.expand()
     if not configs:
         configs = [exp.base]
-    synth = exp.traces is None
-    unique, index_map = _dedup(configs, exp.dedup, synth)
+    serving = exp.traces is None and configs[0].serving is not None
+    synth = exp.traces is None and not serving
+    mode = "serving" if serving else ("synth" if synth else "trace")
+    unique, index_map = _dedup(configs, exp.dedup, mode)
 
+    if serving:
+        for cfg in unique:
+            assert cfg.serving is not None, (
+                "a serving experiment (base.serving set) must set "
+                "cfg.serving on every grid point")
+        # one pseudo trace row so chunk fan-out/assembly is shared below
+        trace_items = [(None, None)]
     if synth:
         for cfg in unique:
             assert cfg.workload is not None and cfg.workload.names, (
@@ -191,12 +217,12 @@ def run_experiment(exp: Experiment, progress=None) -> Results:
 
     # group traces by core count; pad within a group to the longest trace
     groups: dict[int, list] = {}
-    if not synth:
+    if exp.traces is not None:
         for pos, (label, batch) in enumerate(trace_items):
             groups.setdefault(batch.gap.shape[0], []).append((pos, batch))
 
     chunk = exp.chunk_size or _auto_chunk(unique, groups, exp.rltl,
-                                          exp.memory_budget_mb)
+                                          exp.memory_budget_mb, mode)
     chunk = max(1, min(chunk, len(unique)))
     chunks = [unique[i:i + chunk] for i in range(0, len(unique), chunk)]
     n_valid = [len(c) for c in chunks]
@@ -207,6 +233,14 @@ def run_experiment(exp: Experiment, progress=None) -> Results:
     done = 0
     by_trace: list[list] = [[None] * len(unique) for _ in trace_items]
     single = not labeled and len(trace_items) == 1
+    if serving:
+        for ci, cfgs in enumerate(chunks):
+            row = sweep_serving(cfgs, shape_grid=unique)
+            by_trace[0][ci * chunk:ci * chunk + n_valid[ci]] = \
+                row[:n_valid[ci]]
+            done += n_valid[ci]
+            if progress is not None:
+                progress(done, total)
     if synth:
         for ci, cfgs in enumerate(chunks):
             row = sweep_synth(cfgs, rltl=exp.rltl, shape_grid=unique)

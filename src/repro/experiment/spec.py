@@ -146,7 +146,44 @@ def _axis_interleave(cfg: SimConfig, value) -> SimConfig:
 
 @register_axis("policy")
 def _axis_policy(cfg: SimConfig, policy: str) -> SimConfig:
-    return dataclasses.replace(cfg, policy=policy)
+    """Polymorphic policy axis: ``"open"``/``"closed"`` select the DRAM
+    row policy (Table 5.1); any registered *serving* policy name (fifo /
+    charge_aware / preempting, ``repro.serving.loop.policies``) selects
+    the serving loop's admission policy instead — the grid point must
+    then carry a ``ServingSpec`` (``base.serving``, DESIGN.md §12)."""
+    if policy in ("open", "closed"):
+        return dataclasses.replace(cfg, policy=policy)
+    from repro.serving.loop import policies as serving_policies
+    assert policy in serving_policies.names(), (
+        f"unknown policy {policy!r}: not a row policy (open/closed) and "
+        f"not a registered serving policy {serving_policies.names()}")
+    assert cfg.serving is not None, (
+        f"serving policy axis value {policy!r} needs base.serving set "
+        f"(a repro.serving.loop.ServingSpec)")
+    return dataclasses.replace(
+        cfg, serving=dataclasses.replace(cfg.serving, policy=policy))
+
+
+def _replace_arrival(cfg: SimConfig, **kw) -> SimConfig:
+    assert cfg.serving is not None, (
+        "arrival axes need base.serving set (a ServingSpec)")
+    arr = dataclasses.replace(cfg.serving.arrival, **kw)
+    return dataclasses.replace(
+        cfg, serving=dataclasses.replace(cfg.serving, arrival=arr))
+
+
+@register_axis("arrival_rate")
+def _axis_arrival_rate(cfg: SimConfig, rate) -> SimConfig:
+    """Mean request arrivals per serving step (a traced ``ArrivalParams``
+    leaf — the load knob of the serving grid, DESIGN.md §12.2)."""
+    return _replace_arrival(cfg, rate=float(rate))
+
+
+@register_axis("burstiness")
+def _axis_burstiness(cfg: SimConfig, b) -> SimConfig:
+    """ON/OFF burstiness of the arrival process (>= 1; traced leaf).
+    Moves variance, not load: the long-run mean rate is unchanged."""
+    return _replace_arrival(cfg, burstiness=float(b))
 
 
 @register_axis("backend")

@@ -24,7 +24,7 @@ from repro.core.hcrac import HCRACConfig
 
 
 def _hcrac_kernel(gid_ref, t_ref, tags_ref, itime_ref, hit_ref, *,
-                  n_sets, n_ways, sweep, caching):
+                  n_sets, n_ways, sweep, caching, exact):
     gids = gid_ref[...]                              # [bq]
     ts = t_ref[...]                                  # [bq]
     tags = tags_ref[...]                             # [S, W]
@@ -35,10 +35,13 @@ def _hcrac_kernel(gid_ref, t_ref, tags_ref, itime_ref, hit_ref, *,
     row_itime = jnp.take(itime, set_idx, axis=0)
 
     ways = jax.lax.broadcasted_iota(jnp.int32, row_tags.shape, 1)
-    slot = set_idx[:, None] * n_ways + ways
-    phase = (slot + 1) * sweep
     c = jnp.int32(caching)
-    alive = ((ts[:, None] - phase) // c) == ((row_itime - phase) // c)
+    if exact:
+        alive = (ts[:, None] - row_itime) <= c
+    else:
+        slot = set_idx[:, None] * n_ways + ways
+        phase = (slot + 1) * sweep
+        alive = ((ts[:, None] - phase) // c) == ((row_itime - phase) // c)
     match = (row_tags != -1) & alive & (row_tags == gids[:, None])
     hit_ref[...] = jnp.any(match, axis=-1).astype(jnp.int32)
 
@@ -53,7 +56,8 @@ def hcrac_lookup_kernel(cfg: HCRACConfig, tags, itime, gids, times, *,
 
     kern = functools.partial(_hcrac_kernel, n_sets=cfg.n_sets,
                              n_ways=cfg.n_ways, sweep=cfg.sweep_period,
-                             caching=cfg.caching_cycles)
+                             caching=cfg.caching_cycles,
+                             exact=cfg.exact_expiry)
     return pl.pallas_call(
         kern,
         grid=(Q // block_q,),

@@ -30,11 +30,16 @@ class HotPageConfig:
     #: page id -> DRAM (bank, row) mapping for the closed-loop simulator
     n_banks: int = 16
     n_rows: int = 65536
+    #: idealised per-entry expiry timer instead of the IIC/EC sweep —
+    #: makes aliveness slot-phase-independent, which the host-vs-traced
+    #: serving parity tests rely on (repro.serving.loop)
+    exact_expiry: bool = False
 
     def hcrac(self) -> hcl.HCRACConfig:
         return hcl.HCRACConfig(
             n_entries=self.n_entries, n_ways=self.n_ways,
-            caching_cycles=ms_to_cycles(self.caching_ms))
+            caching_cycles=ms_to_cycles(self.caching_ms),
+            exact_expiry=self.exact_expiry)
 
 
 class HotPageTracker:

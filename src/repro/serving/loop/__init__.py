@@ -1,0 +1,28 @@
+"""Fully-traced continuous-batching serving loop (DESIGN.md §12).
+
+The serving closed loop as a compiled scan: ``ServingSpec`` (static
+description, ``SimConfig.serving``), the ``@register_policy`` traced
+policy registry, and the fused engine (``run_sweep`` /
+``simulate_serving`` — also reachable as ``repro.core.simulator
+.sweep_serving`` / ``.simulate_serving`` and via the ``policy`` /
+``arrival_rate`` / ``burstiness`` experiment axes).
+"""
+
+from repro.serving.loop.policies import (Policy, register_policy,
+                                         names as policy_names)
+from repro.serving.loop.spec import ServingSpec
+
+__all__ = ["ServingSpec", "Policy", "register_policy", "policy_names",
+           "run_sweep", "simulate_serving", "page_gid"]
+
+_LAZY = ("run_sweep", "simulate_serving", "page_gid")
+
+
+def __getattr__(name):
+    if name in _LAZY or name == "engine":
+        import importlib
+        engine = importlib.import_module("repro.serving.loop.engine")
+        if name == "engine":
+            return engine
+        return getattr(engine, name)
+    raise AttributeError(name)

@@ -1,0 +1,80 @@
+"""Host-side parity oracle for the traced serving loop (DESIGN.md §12).
+
+Drives the *host* ``repro.serving.scheduler.Scheduler`` over a pinned
+per-step arrival schedule, mirroring the traced ``lax.scan`` loop's
+step order (arrivals → admission → occupancy snapshot → decode/retire)
+with the scheduler keyed by the very same hashed page ids the traced
+hot table uses — so per-step occupancy, retirement and the hot-probe
+stats are *exactly* comparable.  Shared by tests/test_serving_loop.py
+and benchmarks/serving_trace.py.
+
+Parity preconditions (what the caller's spec must satisfy):
+
+* ``hot_exact=True`` — slot-phase-independent aliveness; the IIC/EC
+  sweep flavour ties entry lifetime to physical slot, which insertion
+  order can permute between the two implementations;
+* pinned counts small enough that the traced loop's static clamps
+  (``queue_cap``, ``arrivals_max``) never bind — the host queue is
+  unbounded;
+* ``page_tokens`` equal to the host ``Request.n_pages`` granule (2048).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.serving.hot_pages import HotPageConfig
+from repro.serving.loop.engine import page_gid
+from repro.serving.loop.spec import ServingSpec
+from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+from repro.workloads.arrivals import arrival_params, request_attrs
+
+__all__ = ["HashedScheduler", "scheduler_config", "run_host"]
+
+
+class HashedScheduler(Scheduler):
+    """Host scheduler keyed identically to the traced loop's hot table:
+    page ids come from the same ``page_gid`` avalanche hash, so both
+    sides index the same HCRAC sets with the same tags."""
+
+    def _page_ids(self, req: Request) -> np.ndarray:
+        ks = np.arange(req.n_pages, dtype=np.int32)
+        return np.asarray(page_gid(np, np.int32(req.rid), ks), np.int64)
+
+
+def scheduler_config(spec: ServingSpec) -> SchedulerConfig:
+    """The host config equivalent to ``spec`` (policy name folded to the
+    host's boolean charge-aware switch; ``preempting`` has no host
+    analogue and maps to charge-aware scoring without preemption)."""
+    return SchedulerConfig(
+        max_batch=spec.max_batch,
+        charge_aware=(spec.policy != "fifo"),
+        hot=HotPageConfig(n_entries=spec.hot_entries, n_ways=spec.hot_ways,
+                          caching_ms=spec.hot_caching_ms,
+                          exact_expiry=spec.hot_exact),
+        cycles_per_step=spec.cycles_per_step)
+
+
+def run_host(spec: ServingSpec, counts: np.ndarray):
+    """Drive the host scheduler on the pinned schedule and return
+    ``(scheduler, per_step_occupancy)`` — the oracle side of the
+    host-vs-traced parity comparison (``simulate_serving(cfg,
+    counts=counts)`` is the traced side)."""
+    assert spec.page_tokens == 2048, \
+        "host Request pages are hard-granuled at 2048 tokens"
+    ap = arrival_params(spec.arrival, spec.n_reqs, xp=np)
+    s = HashedScheduler(scheduler_config(spec))
+    occ, n_arrived = [], 0
+    for k in np.asarray(counts):
+        n_new = min(int(k), spec.n_reqs - n_arrived)
+        for j in range(n_new):
+            rid = n_arrived + j
+            pages, dec = request_attrs(np, ap, np.int32(rid))
+            s.submit(Request(rid=rid,
+                             prompt_len=int(pages) * spec.page_tokens,
+                             max_new=int(dec)))
+        n_arrived += n_new
+        s._admit()
+        occ.append(len(s.active))
+        s.step()  # re-runs _admit (a no-op), decodes, retires
+    return s, np.asarray(occ)

@@ -1,0 +1,148 @@
+"""Registry of traced admission/preemption policies (DESIGN.md §12.3).
+
+The serving counterpart of ``repro.core.mechanisms``: each policy is a
+registered object contributing a *traced params block* — a dict of jnp
+leaves including a boolean ``enable`` — that is present at EVERY grid
+point.  Policy selection is data, not structure: the engine folds every
+registered policy's score/preempt contribution over the defaults, gated
+by each block's ``enable`` leaf, so one compiled serving scan serves a
+whole policy axis (``register_axis("policy")``).
+
+Scoring contract: a policy ranks *queued* requests for admission via
+the hot-page charge model's **prediction** — the closed-form charge
+``clip(1 - age / caching_cycles, 0, 1)`` of a request's last page touch
+(``q_touch``) — rather than probing the hot table per candidate page
+(the host ``Scheduler`` does O(queue x pages) table probes per step;
+the prediction is the same decay law the table implements and keeps the
+traced step O(queue)).  Admission always breaks score ties by arrival
+order (FIFO), matching the host scheduler's stable sort.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+__all__ = ["register_policy", "names", "get", "build_blocks",
+           "admission_scores", "preempt_decision", "AdmitCtx",
+           "PreemptCtx", "Policy"]
+
+_REGISTRY: dict[str, "Policy"] = {}
+
+
+def register_policy(name: str):
+    """Class decorator: instantiate and register a serving policy."""
+    def deco(cls):
+        inst = cls()
+        inst.name = name
+        _REGISTRY[name] = inst
+        return cls
+    return deco
+
+
+def names() -> tuple:
+    return tuple(_REGISTRY)
+
+
+def get(name: str) -> "Policy":
+    return _REGISTRY[name]
+
+
+class AdmitCtx(NamedTuple):
+    """What a policy may read when scoring queued requests."""
+    now: jnp.ndarray             # i32 scalar: scheduler clock
+    q_touch: jnp.ndarray         # [Q] i32: last page-touch cycle
+    q_seq: jnp.ndarray           # [Q] i32: arrival sequence number
+    q_valid: jnp.ndarray         # [Q] bool
+    caching_cycles: jnp.ndarray  # i32: hot-table charge window C
+
+
+class PreemptCtx(NamedTuple):
+    now: jnp.ndarray    # i32 scalar
+    q_len: jnp.ndarray  # i32: queue length after this step's arrivals
+
+
+class Policy:
+    """Base: a block is just the ``enable`` gate; no score (FIFO order),
+    no preemption."""
+    name = "?"
+
+    def block(self, spec) -> dict:
+        return {"enable": jnp.bool_(spec.policy == self.name)}
+
+    def score(self, blk: dict, ctx: AdmitCtx):
+        return None
+
+    def preempt(self, blk: dict, ctx: PreemptCtx):
+        return None
+
+
+def _charge_score(ctx: AdmitCtx) -> jnp.ndarray:
+    """Predicted page charge of each queued request: the hot-page decay
+    law applied to its last touch (prefill at submit, or its final
+    decode before preemption)."""
+    age = (ctx.now - ctx.q_touch).astype(jnp.float32)
+    c = jnp.maximum(ctx.caching_cycles.astype(jnp.float32),
+                    jnp.float32(1.0))
+    return jnp.clip(jnp.float32(1.0) - age / c,
+                    jnp.float32(0.0), jnp.float32(1.0))
+
+
+@register_policy("fifo")
+class FIFO(Policy):
+    """Pure arrival order (the all-zero score + FIFO tie-break)."""
+
+
+@register_policy("charge_aware")
+class ChargeAware(Policy):
+    """Admit requests whose KV pages are predicted still charged."""
+
+    def score(self, blk, ctx):
+        return _charge_score(ctx)
+
+
+@register_policy("preempting")
+class Preempting(Policy):
+    """Charge-aware admission plus preempt-and-requeue under long-queue
+    regimes: when the queue exceeds ``preempt_queue_frac * queue_cap``,
+    the active request with the most remaining work is requeued (one per
+    step), freeing a slot for charged short work."""
+
+    def block(self, spec):
+        thresh = int(spec.preempt_queue_frac * spec.queue_cap)
+        return {"enable": jnp.bool_(spec.policy == self.name),
+                "q_thresh": jnp.int32(thresh)}
+
+    def score(self, blk, ctx):
+        return _charge_score(ctx)
+
+    def preempt(self, blk, ctx):
+        return ctx.q_len > blk["q_thresh"]
+
+
+def build_blocks(spec) -> dict:
+    """One block per registered policy — every block present at every
+    grid point (uniform pytree structure across a stacked grid)."""
+    return {n: pol.block(spec) for n, pol in _REGISTRY.items()}
+
+
+def admission_scores(blocks: dict, ctx: AdmitCtx) -> jnp.ndarray:
+    """Fold every registered policy's score over the FIFO default (all
+    zeros), each gated by its traced ``enable`` leaf."""
+    score = jnp.zeros(ctx.q_touch.shape, jnp.float32)
+    for name, pol in _REGISTRY.items():
+        s = pol.score(blocks[name], ctx)
+        if s is not None:
+            score = jnp.where(blocks[name]["enable"], s, score)
+    return score
+
+
+def preempt_decision(blocks: dict, ctx: PreemptCtx) -> jnp.ndarray:
+    """Whether the enabled policy wants a preemption this step (bool)."""
+    do = jnp.bool_(False)
+    for name, pol in _REGISTRY.items():
+        d = pol.preempt(blocks[name], ctx)
+        if d is not None:
+            do = jnp.where(blocks[name]["enable"], d, do)
+    return do

@@ -94,7 +94,13 @@ class Scheduler:
             self.stats["probes"] += len(pages)
             self.stats["hot_hits"] += int(hits.sum())
             scores.append(float(hits.mean()) if len(hits) else 0.0)
-        order = np.argsort(scores)[::-1][:free]
+        # stable sort on *negated* scores: equal-score requests keep FIFO
+        # (arrival) order.  The old ``np.argsort(scores)[::-1]`` reversed a
+        # non-stable sort, so ties came out in arbitrary — typically
+        # *reversed-arrival* — order, starving the oldest queued requests
+        # exactly when scores degenerate (all-cold queues score 0.0
+        # everywhere; regression in tests/test_substrate.py).
+        order = np.argsort(-np.asarray(scores), kind="stable")[:free]
         chosen = {cands[i].rid for i in order}
         self.active.extend(r for r in cands if r.rid in chosen)
         self.queue = deque(r for r in cands if r.rid not in chosen)
@@ -144,11 +150,22 @@ class Scheduler:
         pages = np.asarray(self.trace_pages, np.int64)
         times = np.asarray(self.trace_times, np.int64)
         bank, row = self.tracker.page_to_dram(pages)
-        gaps = np.diff(times, prepend=0)
+        # prepend the first timestamp itself (not 0): the stream's first
+        # request has no predecessor, so its gap is the *intra-step*
+        # spacing — ``prepend=0`` used to make the first gap equal the
+        # first absolute timestamp, a giant bogus idle gap whenever the
+        # scheduler clock did not start at 0 (tests/test_substrate.py).
+        gaps = np.diff(times, prepend=times[:1])
         # several accesses share a scheduler step -> small intra-step gaps
         same = gaps == 0
         gaps[same] = 4
-        tr = Trace(gap=np.maximum(gaps, 1).astype(np.int32),
+        # saturate before the int64 -> int32 cast: a long-running
+        # scheduler's inter-step gaps can exceed int32 (the cast used to
+        # wrap negative, which the simulator's cycle arithmetic would
+        # silently corrupt).  _MAX_GAP is the generator's int32
+        # cycle-horizon guard (repro.workloads.generator).
+        gaps = np.clip(gaps, 1, np.int64(1) << 20)
+        tr = Trace(gap=gaps.astype(np.int32),
                    bank=bank, row=row,
                    is_write=np.zeros(len(pages), bool),
                    dep=np.zeros(len(pages), bool))

@@ -13,6 +13,8 @@ alongside the materialized-trace path; the declarative front door is
 
 from repro.core.traces import WorkloadSpec
 from repro.workloads import prng
+from repro.workloads.arrivals import (ArrivalConfig, ArrivalParams,
+                                      arrival_params)
 from repro.workloads.generator import generate, materialize
 from repro.workloads.profiles import (WorkloadParams, max_len_of,
                                       profile_params, spec_params)
@@ -20,4 +22,5 @@ from repro.workloads.profiles import (WorkloadParams, max_len_of,
 __all__ = [
     "WorkloadSpec", "WorkloadParams", "generate", "materialize",
     "max_len_of", "profile_params", "spec_params", "prng",
+    "ArrivalConfig", "ArrivalParams", "arrival_params",
 ]

@@ -1,0 +1,137 @@
+"""Traced request-arrival process for the serving loop (DESIGN.md §12.2).
+
+The serving analogue of ``repro.workloads.generator``: arrivals are
+drawn on device from the counter-based PRNG (``repro.workloads.prng``)
+so a policy × arrival-rate × burstiness grid rides ONE compile with
+zero host materialization.  The model is a two-state ON/OFF burst
+process:
+
+* each scheduler step is independently ON with probability
+  ``1 / burstiness`` (``burstiness = 1`` → always ON, Bernoulli-thinned
+  geometric arrivals ≈ Poisson-like traffic);
+* an ON step draws a geometric batch with mean ``rate * burstiness``,
+  so the *long-run* mean is ``rate`` requests/step for every
+  burstiness — the knob moves variance (burst clustering), not load.
+
+Request attributes (prompt pages, decode length) are pure functions of
+the request index, so the host parity oracle can recompute them
+bitwise (integer-only hashing; ``request_attrs`` with ``xp=numpy``).
+``reference_counts`` is an independent ``np.random`` implementation of
+the same model used only for statistical-parity tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import numpy as np
+
+from repro.workloads import prng
+
+__all__ = ["ArrivalConfig", "ArrivalParams", "arrival_params",
+           "step_counts", "request_attrs", "reference_counts"]
+
+# independent lane constants for the arrival stream's draws
+_L_ON, _L_COUNT, _L_PROMPT, _L_DECODE = prng.lanes(4)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalConfig:
+    """Host-side arrival-process description (hashable, dedup-able)."""
+    rate: float = 2.0          # mean requests per scheduler step
+    burstiness: float = 1.0    # >= 1; 1 = smooth, higher = bursty ON/OFF
+    prompt_pages_min: int = 1  # KV pages per prompt (inclusive range)
+    prompt_pages_max: int = 8
+    decode_min: int = 16       # decode tokens per request (inclusive)
+    decode_max: int = 64
+    seed: int = 0
+
+    def __post_init__(self):
+        assert self.rate > 0.0
+        assert self.burstiness >= 1.0
+        assert 1 <= self.prompt_pages_min <= self.prompt_pages_max
+        assert 1 <= self.decode_min <= self.decode_max
+
+
+class ArrivalParams(NamedTuple):
+    """Traced leaves of the arrival process (vmap-stacked per grid
+    point — ``arrival_rate``/``burstiness`` axes sweep these)."""
+    rate: object        # f32 scalar
+    burstiness: object  # f32 scalar
+    prompt_lo: object   # i32 scalar
+    prompt_hi: object   # i32 scalar (inclusive)
+    decode_lo: object   # i32 scalar
+    decode_hi: object   # i32 scalar (inclusive)
+    seed: object        # i32 scalar
+    n_reqs: object      # i32 scalar: total request budget of the stream
+
+
+def arrival_params(cfg: ArrivalConfig, n_reqs: int,
+                   xp=None) -> ArrivalParams:
+    """Traced leaves of ``cfg`` (``xp=numpy`` for the host oracle)."""
+    if xp is None:
+        import jax.numpy as jnp
+        xp = jnp
+    return ArrivalParams(
+        rate=xp.float32(cfg.rate),
+        burstiness=xp.float32(cfg.burstiness),
+        prompt_lo=xp.int32(cfg.prompt_pages_min),
+        prompt_hi=xp.int32(cfg.prompt_pages_max),
+        decode_lo=xp.int32(cfg.decode_min),
+        decode_hi=xp.int32(cfg.decode_max),
+        seed=xp.int32(cfg.seed),
+        n_reqs=xp.int32(n_reqs),
+    )
+
+
+def step_counts(xp, p: ArrivalParams, steps):
+    """Arrivals drawn at step indices ``steps`` (i32 array) -> i32 array.
+
+    Counter-based: count at step ``t`` is a pure function of
+    ``(seed, t)``, so the numpy mirror (``xp=numpy``) reproduces the
+    traced stream (bit-exact up to the float32 log transcendentals —
+    tests assert a < 1e-3 mismatch fraction, and exact equality on the
+    integer ON/OFF gate).
+    """
+    steps = xp.asarray(steps).astype(xp.int32)
+    b = xp.maximum(p.burstiness, xp.float32(1.0))
+    # ON/OFF gate: P(on) = 1/b.  uniform() is bitwise across backends.
+    on = prng.uniform(xp, p.seed, _L_ON, steps) * b < xp.float32(1.0)
+    # ON-step batch ~ Geometric (support 0,1,2,...) with mean m = rate*b:
+    # n = floor(log(1-u) / log(q)), q = m/(1+m)  (P(N=k) = (1-q) q^k).
+    m = p.rate * b
+    q = xp.clip(m / (xp.float32(1.0) + m),
+                xp.float32(1e-9), xp.float32(1.0 - 1e-6))
+    u = prng.uniform(xp, p.seed, _L_COUNT, steps)
+    n = xp.floor(xp.log1p(-u) / xp.log(q)).astype(xp.int32)
+    return xp.where(on, n, xp.int32(0))
+
+
+def request_attrs(xp, p: ArrivalParams, i):
+    """Attributes of request index ``i`` -> ``(prompt_pages, decode)``,
+    both i32.  Integer-only hashing: bitwise identical under numpy and
+    JAX, which is what pins the host parity oracle to the traced loop.
+    """
+    i = xp.asarray(i).astype(xp.int32)
+    pspan = (p.prompt_hi - p.prompt_lo + 1).astype(xp.uint32)
+    dspan = (p.decode_hi - p.decode_lo + 1).astype(xp.uint32)
+    pages = p.prompt_lo + (prng.hash_u32(xp, p.seed, _L_PROMPT, i)
+                           % pspan).astype(xp.int32)
+    decode = p.decode_lo + (prng.hash_u32(xp, p.seed, _L_DECODE, i)
+                            % dspan).astype(xp.int32)
+    return pages, decode
+
+
+def reference_counts(cfg: ArrivalConfig, n_steps: int,
+                     seed: int = 0) -> np.ndarray:
+    """Independent ``np.random`` implementation of the ON/OFF model —
+    the statistical oracle for ``step_counts`` (mean rate, burst CDF).
+    """
+    rng = np.random.default_rng(seed)
+    on = rng.random(n_steps) < 1.0 / cfg.burstiness
+    m = cfg.rate * cfg.burstiness
+    q = m / (1.0 + m)
+    # geometric over {0,1,...}: numpy's is over {1,2,...} with p=1-q
+    n = rng.geometric(1.0 - q, n_steps) - 1
+    return np.where(on, n, 0).astype(np.int64)

@@ -227,6 +227,55 @@ def test_admission_hot_cold_mix_regression():
     assert 0.0 <= rf < ra <= 1.0
 
 
+def test_admit_stable_fifo_tiebreak():
+    """Regression: ``_admit``'s charge-aware ranking must be *stable* —
+    among equal-score candidates, admission keeps FIFO (arrival) order.
+    With an all-cold queue every score is 0.0; the old reversed
+    non-stable argsort admitted the *newest* requests first."""
+    from repro.serving.hot_pages import HotPageConfig
+    from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+    s = Scheduler(SchedulerConfig(
+        max_batch=4, charge_aware=True,
+        hot=HotPageConfig(n_entries=1018, caching_ms=0.05)))
+    for rid in range(12):
+        s.submit(Request(rid=rid, prompt_len=4096, max_new=8))
+    s.now += 50_000  # > the caching window: every queued page is cold
+    s._admit()
+    assert [r.rid for r in s.active] == [0, 1, 2, 3], (
+        "equal-score admission must preserve arrival order")
+    # the rest of the queue keeps arrival order too
+    assert [r.rid for r in s.queue] == list(range(4, 12))
+
+
+def test_emit_trace_first_gap_and_saturation():
+    """Regression for the two ``emit_trace`` artifacts: (a) the first gap
+    must be the intra-step spacing, not the first absolute timestamp;
+    (b) gaps saturate before the int64 -> int32 cast instead of
+    wrapping negative on long runs."""
+    from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
+    s = Scheduler(SchedulerConfig(max_batch=4))
+    s.now = 10_000_000  # clock not starting at zero
+    s.submit(Request(rid=0, prompt_len=4096, max_new=2))
+    s.run(10)
+    tr = s.emit_trace()
+    # (a) first gap is the small intra-step spacing, not 10_000_000
+    assert tr.gap[0, 0] == 4
+    assert tr.gap.max() <= (1 << 20)
+    # (b) a > int32 idle jump saturates (stays positive) after the cast
+    # (injected into the access log directly: the hot-page tracker's own
+    # clock is int32, but a long-lived scheduler accumulates int64 times
+    # in ``trace_times`` — exactly what emit_trace consumes)
+    s2 = Scheduler(SchedulerConfig(max_batch=4))
+    s2.submit(Request(rid=0, prompt_len=2048, max_new=1))
+    s2.run(4)
+    s2.trace_pages.append(12345)
+    s2.trace_times.append(s2.trace_times[-1] + 2**33)
+    tr2 = s2.emit_trace()
+    assert tr2.gap.dtype == np.int32
+    assert (tr2.gap >= 1).all(), "gap overflow wrapped negative"
+    assert tr2.gap.max() == (1 << 20)
+
+
 # ----------------------------------------------------------------- sharding
 
 def test_sharding_rules_divisibility():
