@@ -11,6 +11,11 @@ and exercises the ``sweep()`` engine end to end (sweep_bench).
 declares an artifact and completes without writing it is a driver
 *failure*, not a silent skip.  The run ends with one summary line
 listing emitted vs skipped artifacts.
+
+``--trajectory`` appends one summary entry (timestamp, git sha, the
+flat numbers of every BENCH artifact) to ``BENCH_trajectory.json``
+after the run; ``--trajectory-only`` records the artifacts already on
+disk without running anything (the CI recorder step).
 """
 
 from __future__ import annotations
@@ -52,11 +57,81 @@ def _record(results: dict, row: str) -> None:
                      "values": _parse_derived(derived)}
 
 
+def _artifact_summaries() -> dict:
+    """Flat numeric top-level values of every ``BENCH_*.json`` artifact
+    at the repo root (the trajectory's per-run payload) — nested
+    structures are skipped, so artifacts opt in to the trajectory by
+    keeping their headline numbers flat (e.g. ``BENCH_megasweep.json``'s
+    points/sec, speedup and peak-RSS scalars)."""
+    out: dict = {}
+    for name in sorted(os.listdir(C.REPO_ROOT)):
+        if not (name.startswith("BENCH_") and name.endswith(".json")):
+            continue
+        if name == TRAJECTORY_JSON_NAME:
+            continue
+        try:
+            with open(C.artifact_path(name)) as f:
+                doc = json.load(f)
+        except (OSError, ValueError):
+            out[name] = {"error": "unreadable"}
+            continue
+        if isinstance(doc, dict):
+            out[name] = {k: v for k, v in doc.items()
+                         if isinstance(v, (int, float, bool))}
+    return out
+
+
+TRAJECTORY_JSON_NAME = "BENCH_trajectory.json"
+
+
+def _git_sha() -> str | None:
+    import subprocess
+    try:
+        p = subprocess.run(["git", "rev-parse", "--short", "HEAD"],
+                           cwd=C.REPO_ROOT, capture_output=True, text=True)
+        return p.stdout.strip() or None
+    except OSError:
+        return None
+
+
+def append_trajectory() -> str:
+    """Append one summary entry (timestamp, git sha, quick flag, the
+    flat numbers of every BENCH artifact) to ``BENCH_trajectory.json``
+    — the per-PR perf trajectory the repo carries forward.  The file is
+    a JSON *array* of entries; appending re-reads and rewrites it (it
+    stays small: one entry per recorded run)."""
+    path = C.artifact_path(TRAJECTORY_JSON_NAME)
+    entries = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                entries = json.load(f)
+            assert isinstance(entries, list)
+        except (ValueError, AssertionError):
+            entries = []
+    entries.append({
+        "ts": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+        "git": _git_sha(),
+        "quick": C.QUICK,
+        "artifacts": _artifact_summaries(),
+    })
+    with open(path, "w") as f:
+        json.dump(entries, f, indent=2, sort_keys=True)
+    print(f"# trajectory: appended entry {len(entries)} to {path}",
+          flush=True)
+    return path
+
+
 def main() -> None:
+    if "--trajectory-only" in sys.argv:
+        # record the current artifacts without re-running anything
+        append_trajectory()
+        return
     from benchmarks import (aldram, capacity, charge_model_bench, duration,
-                            energy, geometry, kernels_bench, rltl,
-                            roofline_bench, serving_loop, serving_trace,
-                            simstep_bench, speedup, sweep_bench, workloads)
+                            energy, geometry, kernels_bench, megasweep,
+                            rltl, roofline_bench, serving_loop,
+                            serving_trace, simstep_bench, speedup,
+                            sweep_bench, workloads)
     # (name, module, declared BENCH_* artifacts the module must emit)
     mods = [
         ("charge_model", charge_model_bench, ()),
@@ -74,6 +149,7 @@ def main() -> None:
         ("serving_loop", serving_loop, ("BENCH_serving.json",)),
         ("kernels", kernels_bench, ()),
         ("roofline", roofline_bench, ()),
+        ("megasweep", megasweep, ("BENCH_megasweep.json",)),
     ]
     print("name,us_per_call,derived")
     results: dict = {}
@@ -113,6 +189,8 @@ def main() -> None:
     if missing:
         print(f"# FATAL: {len(missing)} declared artifact(s) silently "
               f"missing: {missing}", flush=True)
+    if "--trajectory" in sys.argv:
+        append_trajectory()
     if failed or missing:
         sys.exit(1)
 

@@ -64,6 +64,7 @@ from repro.core.timing import (TimingParams, TimingVec, DDR3_1600,
                                ms_to_cycles)
 from repro.core.traces import TraceBatch, WorkloadSpec
 from repro.core import mechanisms as registry
+from repro.core import metrics as metrics_lib
 from repro.core.mechanisms import default_nuat_bins  # noqa: F401 (re-export)
 
 # np scalar so Pallas kernel bodies may close over it (see dram.NO_ROW)
@@ -239,6 +240,35 @@ STAT_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
 #: stay zero — the per-bank view AL-DRAM's offset study and the
 #: geometry-masking tests read; DESIGN.md §9)
 BANK_STAT_KEYS = ("bank_acts", "bank_act_ras_sum")
+
+#: the integer metric *ingredients* a trace/synth launch can lower to a
+#: ``[grid, n_deps]`` int32 array on device (DESIGN.md §13): the scalar
+#: scan counters plus the engine-derived ``total_cycles`` (``max`` over
+#: the per-core end times).  Serving launches extend this with their own
+#: counters (``serving.loop.engine.SERVE_REDUCE_KEYS``).
+REDUCE_KEYS = STAT_KEYS + ("total_cycles",)
+
+
+def _reduce_device(raw_stats: dict, core_end, reduce_keys: tuple):
+    """On-device metric-ingredient reduction: stack the requested scalar
+    counters into an int32 ``[..., n_deps]`` column array.  Runs inside
+    the engine jits (``reduce_keys`` is a static arg), so a reduced
+    chunk launch transfers ``n_deps`` ints per point instead of the full
+    stat pytree + per-bank arrays."""
+    cols = []
+    for k in reduce_keys:
+        if k == "total_cycles":
+            cols.append(jnp.max(core_end, axis=-1))
+        else:
+            cols.append(raw_stats[k])
+    return jnp.stack(cols, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _reduce_jit(raw_stats: dict, core_end, reduce_keys: tuple):
+    """Standalone jitted reduction for engines whose launch is already
+    compiled elsewhere (the Pallas kernel tier)."""
+    return _reduce_device(raw_stats, core_end, reduce_keys)
 
 
 class Events(NamedTuple):
@@ -617,10 +647,11 @@ def _run(shape: SimShape, params: MechParams, trace: dict, warmup_steps,
                      collect_events)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+@functools.partial(jax.jit, static_argnums=(0, 4, 5, 8))
 def _run_batched(shape: SimShape, params: MechParams, trace: dict,
                  warmup_steps, n_steps: int, collect_events: bool = True,
-                 ns_geoms: GeomParams | None = None, ns_idx=None):
+                 ns_geoms: GeomParams | None = None, ns_idx=None,
+                 reduce_keys: tuple | None = None):
     """The vmapped grid engine: ``params`` leaves carry a leading [grid]
     axis; one compilation of the (single) scan body serves every grid
     point.
@@ -629,30 +660,42 @@ def _run_batched(shape: SimShape, params: MechParams, trace: dict,
     ``next_same`` recompute to one lookahead per distinct geometry: each
     point gathers its geometry's row of the shared table instead of
     re-running the reverse scan — bitwise-identical (same function, same
-    folded inputs).  ``None`` falls back to the per-point recompute."""
+    folded inputs).  ``None`` falls back to the per-point recompute.
+
+    ``reduce_keys`` (static) switches the launch to the on-device
+    reduction contract (DESIGN.md §13): the return value is the
+    ``[grid, n_deps]`` int32 column array of ``_reduce_device`` instead
+    of the ``(stats, core_end, events)`` triple."""
     if ns_geoms is None:
-        return jax.vmap(
+        out = jax.vmap(
             lambda p: _run_impl(shape, p, trace, warmup_steps, n_steps,
                                 collect_events))(params)
-    ns = _ns_tables(shape, trace, ns_geoms)
+    else:
+        ns = _ns_tables(shape, trace, ns_geoms)
 
-    def one(p, gi):
-        return _run_impl(shape, p, {**trace, "next_same": ns[gi]},
-                         warmup_steps, n_steps, collect_events)
-    return jax.vmap(one)(params, ns_idx)
+        def one(p, gi):
+            return _run_impl(shape, p, {**trace, "next_same": ns[gi]},
+                             warmup_steps, n_steps, collect_events)
+        out = jax.vmap(one)(params, ns_idx)
+    if reduce_keys is not None:
+        return _reduce_device(out[0], out[1], reduce_keys)
+    return out
 
 
-@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+@functools.partial(jax.jit, static_argnums=(0, 4, 5, 8))
 def _run_grid(shape: SimShape, params: MechParams, traces: dict,
               warmups, n_steps: int, collect_events: bool = False,
-              ns_geoms: GeomParams | None = None, ns_idx=None):
+              ns_geoms: GeomParams | None = None, ns_idx=None,
+              reduce_keys: tuple | None = None):
     """The full grid engine: nested vmap over [traces] x [params].
 
     ``traces`` leaves carry a leading [batch] axis, ``warmups`` is [batch],
     ``params`` leaves carry a leading [grid] axis; the single compiled
     scan body serves every (trace, config) pair.  ``ns_geoms``/``ns_idx``
     hoist the ``next_same`` recompute per (trace, distinct geometry)
-    instead of per (trace, point) — see ``_run_batched``."""
+    instead of per (trace, point) — see ``_run_batched``.  ``reduce_keys``
+    (static) returns the ``[batch, grid, n_deps]`` int32 reduction
+    instead of the stats triple (DESIGN.md §13)."""
     def per_trace(trace, warmup):
         if ns_geoms is None:
             return jax.vmap(
@@ -664,7 +707,10 @@ def _run_grid(shape: SimShape, params: MechParams, traces: dict,
             return _run_impl(shape, p, {**trace, "next_same": ns[gi]},
                              warmup, n_steps, collect_events)
         return jax.vmap(one)(params, ns_idx)
-    return jax.vmap(per_trace)(traces, warmups)
+    out = jax.vmap(per_trace)(traces, warmups)
+    if reduce_keys is not None:
+        return _reduce_device(out[0], out[1], reduce_keys)
+    return out
 
 
 def _rltl_post_pass(events: Events):
@@ -823,15 +869,10 @@ def _finalize(raw_stats: dict, core_end, rltl: tuple,
         stats["n_ranks"] = cfg.dram.n_ranks
         stats["n_banks"] = cfg.dram.n_banks
         stats["banks_total"] = cfg.dram.banks_total
-    s = stats
-    s["avg_latency"] = float(s["lat_sum"]) / max(int(s["n_req"]), 1)
-    s["hcrac_hit_rate"] = (float(s["hcrac_hits"]) /
-                           max(int(s["hcrac_lookups"]), 1))
-    s["acts_lowered_frac"] = (float(s["acts_lowered"]) /
-                              max(int(s["acts"]), 1))
-    s["row_hit_rate"] = float(s["row_hits"]) / max(int(s["n_req"]), 1)
-    s["rmpkc"] = 1000.0 * float(s["acts"]) / max(s["total_cycles"], 1)
-    return stats
+    # derived scalars come from the one metric registry (DESIGN.md §13):
+    # the same formulas serve this full-stats path and the on-device
+    # reduce path, so the two are bitwise-equal by construction
+    return metrics_lib.finalize_scalars(stats)
 
 
 def simulate(batch: TraceBatch, cfg: SimConfig = SimConfig()) -> dict:
@@ -887,6 +928,56 @@ def _uniform_backend(grid: Sequence[SimConfig]) -> str:
     return backend
 
 
+def _freeze_hints(hints: dict) -> tuple:
+    """Hashable view of the registry pad hints (cache key component)."""
+    return tuple(sorted((n, tuple(sorted(h.items())))
+                        for n, h in hints.items()))
+
+
+@functools.lru_cache(maxsize=16384)
+def _point_params_np(timing: TimingParams, dram: DRAMConfig, policy: str,
+                     mech: MechanismConfig, hints_key: tuple,
+                     env: DRAMEnvelope):
+    """One grid point's ``mech_params`` pytree as flat *numpy* leaves.
+
+    ``mech_params`` only reads (timing, dram, policy, mech), so points
+    differing elsewhere (a workload-seed axis, serving knobs, ...) share
+    one cache entry — and a 10⁵-point grid stages from a handful of
+    distinct entries by fancy-indexing numpy columns instead of building
+    10⁵ × ~80 device scalars (``_grid_shape_and_params``).  The hints
+    key covers the registered-policy set, so a temporarily registered
+    mechanism (tests' ``registry.temporary``) never aliases an entry."""
+    cfg = SimConfig(dram=dram, timing=timing, mech=mech, policy=policy)
+    hints = {n: dict(h) for n, h in hints_key}
+    p = mech_params(cfg, hints=hints, envelope=env)
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    return tuple(np.asarray(x) for x in leaves), treedef
+
+
+def _stack_cached(grid, point_key, point_leaves):
+    """Stack per-point cached numpy leaf tuples into ``[grid, ...]``
+    columns: dedup points by ``point_key``, stack the few distinct leaf
+    sets, fan out with one fancy-index per leaf."""
+    uniq_of: dict = {}
+    uniq: list = []
+    kidx = np.empty(len(grid), np.intp)
+    for i, cfg in enumerate(grid):
+        k = point_key(cfg)
+        j = uniq_of.get(k)
+        if j is None:
+            j = uniq_of[k] = len(uniq)
+            uniq.append(point_leaves(cfg))
+        kidx[i] = j
+    leaves0, treedef = uniq[0]
+    for lv, td in uniq[1:]:
+        assert td == treedef, "grid points disagree on params structure"
+    cols = []
+    for li in range(len(leaves0)):
+        u = np.stack([lv[li] for lv, _ in uniq])
+        cols.append(u[kidx])
+    return jax.tree_util.tree_unflatten(treedef, cols)
+
+
 def _grid_shape_and_params(grid: Sequence[SimConfig],
                            shape_grid: Sequence[SimConfig] | None = None):
     """Validate grid shape compatibility; return the unified static shape
@@ -898,6 +989,13 @@ def _grid_shape_and_params(grid: Sequence[SimConfig],
     grid here while launching a chunk, so every chunk shares one
     ``SimShape`` — and therefore one compilation.  Extra padding is
     behaviour-neutral (DESIGN.md §4, §8).
+
+    The stacked leaves are *numpy* arrays assembled from the per-point
+    ``_point_params_np`` cache — same dtypes/values as the former
+    ``jnp.stack`` of per-point device scalars (the jit consumes either),
+    but staging cost scales with *distinct* (timing, dram, policy, mech)
+    combinations, not grid size, and the arrays slice cheaply per chunk
+    (the §13 streaming runner's staged-once contract).
     """
     shape_grid = list(shape_grid) if shape_grid is not None else list(grid)
     c0 = grid[0]
@@ -912,15 +1010,62 @@ def _grid_shape_and_params(grid: Sequence[SimConfig],
     env = envelope_of([cfg.dram for cfg in list(grid) + shape_grid])
     hints = registry.pad_hints([cfg.mech for cfg in shape_grid])
     shape = sim_shape(c0, n_sets_max=n_sets_max, envelope=env)
-    stacked = jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs),
-        *[mech_params(cfg, hints=hints, envelope=env) for cfg in grid])
+    hkey = _freeze_hints(hints)
+    stacked = _stack_cached(
+        grid,
+        point_key=lambda cfg: (cfg.timing, cfg.dram, cfg.policy, cfg.mech),
+        point_leaves=lambda cfg: _point_params_np(
+            cfg.timing, cfg.dram, cfg.policy, cfg.mech, hkey, env))
     return shape, stacked
+
+
+def _launch_batch(shape, stacked, trace, warmup, n_steps: int,
+                  collect_events: bool, ns_geoms, ns_idx, n_grid: int,
+                  backend: str = "ref",
+                  reduce_keys: tuple | None = None):
+    """Dispatch one (possibly chunk-sliced) stacked-params trace launch
+    and return the *unblocked* device output — the async half of
+    ``sweep()``.  The §13 pipeline calls this for chunk k+1 while chunk
+    k's output is still in flight; nothing blocks until ``_drain_batch``
+    touches the arrays."""
+    if reduce_keys is not None:
+        collect_events = False
+    if backend == "pallas":
+        from repro.kernels.sim_step import ops as sim_step_ops
+        out = sim_step_ops.run_sweep(shape, stacked, trace, warmup,
+                                     n_steps, collect_events, ns_geoms,
+                                     ns_idx)
+        if reduce_keys is not None:
+            return _reduce_jit(out[0], out[1], reduce_keys)
+        return out
+    (stacked, ns_idx), _ = _shard_grid((stacked, ns_idx), n_grid)
+    return _run_batched(shape, stacked, trace, warmup, n_steps,
+                        collect_events, ns_geoms, ns_idx, reduce_keys)
+
+
+def _drain_batch(out, grid, lengths, n_grid: int,
+                 reduce_keys: tuple | None = None):
+    """Block on a ``_launch_batch`` output and convert: the reduced
+    ``[grid, n_deps]`` int columns, or the full per-point stats dicts
+    (``_finalize``)."""
+    if reduce_keys is not None:
+        return np.asarray(out)[:n_grid]
+    raw_stats, core_end, events = out
+    stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}
+    core_np = np.asarray(core_end)
+    hist_np, total_np = _rltl_np(events)
+    return [
+        _finalize({k: v[g] for k, v in stats_np.items()}, core_np[g],
+                  (None, None) if hist_np is None
+                  else (hist_np[g], total_np[g]), lengths, grid[g])
+        for g in range(n_grid)
+    ]
 
 
 def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
           pad_steps: bool = False, rltl: bool = True,
-          shape_grid: Sequence[SimConfig] | None = None) -> list[dict]:
+          shape_grid: Sequence[SimConfig] | None = None,
+          reduce_keys: tuple | None = None):
     """Evaluate every configuration in ``grid`` on ``batch`` in one call.
 
     The whole grid — any mix of the registered mechanism kinds, HCRAC
@@ -940,6 +1085,11 @@ def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
     smaller when the RLTL histogram isn't needed.  ``shape_grid`` lets a
     caller pad shapes for a larger grid than it launches (the experiment
     runner's chunking mode; see ``_grid_shape_and_params``).
+
+    ``reduce_keys`` (a tuple of ``REDUCE_KEYS`` entries) switches to the
+    on-device reduction contract (DESIGN.md §13): the return value is a
+    ``[grid, n_deps]`` int numpy array instead of per-point stats dicts
+    (RLTL events are never collected in this mode).
     """
     grid = list(grid)
     assert grid, "empty sweep grid"
@@ -958,31 +1108,51 @@ def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
         grid, shape_grid if shape_grid is not None else grid)
 
     n_grid = len(grid)
-    if _uniform_backend(grid) == "pallas":
-        from repro.kernels.sim_step import ops as sim_step_ops
-        raw_stats, core_end, events = sim_step_ops.run_sweep(
-            shape, stacked, trace, warmup, n_steps, rltl, ns_geoms, ns_idx)
-    else:
-        (stacked, ns_idx), _ = _shard_grid((stacked, ns_idx), n_grid)
-        raw_stats, core_end, events = _run_batched(
-            shape, stacked, trace, warmup, n_steps, rltl, ns_geoms, ns_idx)
-
+    out = _launch_batch(shape, stacked, trace, warmup, n_steps, rltl,
+                        ns_geoms, ns_idx, n_grid,
+                        backend=_uniform_backend(grid),
+                        reduce_keys=reduce_keys)
     # one device->host transfer for the whole grid, then per-point views
-    stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}
+    return _drain_batch(out, grid, batch.length, n_grid, reduce_keys)
+
+
+def _launch_grid(shape, stacked, traces, warmups, n_steps: int,
+                 collect_events: bool, ns_geoms, ns_idx, n_batch: int,
+                 reduce_keys: tuple | None = None):
+    """Async dispatch of the nested [batch, grid] engine (ref tier only
+    — see ``sweep_traces``); returns the unblocked device output."""
+    if reduce_keys is not None:
+        collect_events = False
+    (traces, warmups), _ = _shard_grid((traces, warmups), n_batch)
+    return _run_grid(shape, stacked, traces, warmups, n_steps,
+                     collect_events, ns_geoms, ns_idx, reduce_keys)
+
+
+def _drain_grid(out, grid, batches, n_batch: int,
+                reduce_keys: tuple | None = None):
+    if reduce_keys is not None:
+        return np.asarray(out)[:n_batch]
+    raw_stats, core_end, events = out
+    stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}  # [B, G]
     core_np = np.asarray(core_end)
     hist_np, total_np = _rltl_np(events)
-    return [
-        _finalize({k: v[g] for k, v in stats_np.items()}, core_np[g],
-                  (None, None) if hist_np is None
-                  else (hist_np[g], total_np[g]), batch.length, grid[g])
-        for g in range(n_grid)
-    ]
+    rows = []
+    for b in range(n_batch):
+        row = []
+        for g in range(len(grid)):
+            rl = ((None, None) if hist_np is None
+                  else (hist_np[b, g], total_np[b, g]))
+            row.append(_finalize({k: v[b, g] for k, v in stats_np.items()},
+                                 core_np[b, g], rl, batches[b].length,
+                                 grid[g]))
+        rows.append(row)
+    return rows
 
 
 def sweep_traces(batches: Sequence[TraceBatch], grid: Sequence[SimConfig],
                  rltl: bool = False,
-                 shape_grid: Sequence[SimConfig] | None = None
-                 ) -> list[list[dict]]:
+                 shape_grid: Sequence[SimConfig] | None = None,
+                 reduce_keys: tuple | None = None):
     """Evaluate a config grid over *several* trace batches in one call.
 
     The full evaluation matrix — every (workload batch, configuration)
@@ -995,6 +1165,8 @@ def sweep_traces(batches: Sequence[TraceBatch], grid: Sequence[SimConfig],
     Returns ``out[b][g]``: stats for batch ``b`` under config ``g``,
     bitwise identical to ``simulate(batches[b], grid[g])`` (modulo the
     RLTL histogram, which is only collected when ``rltl=True``).
+    ``reduce_keys`` returns the ``[batch, grid, n_deps]`` int array of
+    the on-device reduction contract instead (DESIGN.md §13).
     """
     batches = list(batches)
     grid = list(grid)
@@ -1025,25 +1197,9 @@ def sweep_traces(batches: Sequence[TraceBatch], grid: Sequence[SimConfig],
         grid, shape_grid if shape_grid is not None else grid)
 
     n_batch = len(batches)
-    (traces, warmups), _ = _shard_grid((traces, warmups), n_batch)
-    raw_stats, core_end, events = _run_grid(shape, stacked, traces,
-                                            warmups, n_steps, rltl,
-                                            ns_geoms, ns_idx)
-
-    stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}  # [B, G]
-    core_np = np.asarray(core_end)
-    hist_np, total_np = _rltl_np(events)
-    out = []
-    for b in range(n_batch):
-        row = []
-        for g in range(len(grid)):
-            rl = ((None, None) if hist_np is None
-                  else (hist_np[b, g], total_np[b, g]))
-            row.append(_finalize({k: v[b, g] for k, v in stats_np.items()},
-                                 core_np[b, g], rl, batches[b].length,
-                                 grid[g]))
-        out.append(row)
-    return out
+    out = _launch_grid(shape, stacked, traces, warmups, n_steps, rltl,
+                       ns_geoms, ns_idx, n_batch, reduce_keys)
+    return _drain_grid(out, grid, batches, n_batch, reduce_keys)
 
 
 # --------------------------------------------------------------------------
@@ -1065,25 +1221,142 @@ def _run_synth_impl(shape: SimShape, n_cores: int, max_len: int,
     return _run_impl(shape, p, trace, warmup, n_steps, collect_events)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8))
+@functools.partial(jax.jit, static_argnums=(0, 1, 2, 7, 8, 9))
 def _run_synth_batched(shape: SimShape, n_cores: int, max_len: int,
                        params: MechParams, wparams, ilparams,
                        warmups, n_steps: int,
-                       collect_events: bool = True):
+                       collect_events: bool = True,
+                       reduce_keys: tuple | None = None):
     """The synthetic grid engine: generation + scan vmapped together —
     ``params`` / ``wparams`` / ``ilparams`` leaves and the per-point
     ``warmups`` carry a leading [grid] axis and one compilation serves
-    every (workload, interleave, geometry, mechanism) point."""
-    return jax.vmap(
+    every (workload, interleave, geometry, mechanism) point.
+    ``reduce_keys`` (static) returns the ``[grid, n_deps]`` int32
+    reduction instead of the stats triple (DESIGN.md §13)."""
+    out = jax.vmap(
         lambda p, w, il, wu: _run_synth_impl(shape, n_cores, max_len, p,
                                              w, il, wu, n_steps,
                                              collect_events))(
         params, wparams, ilparams, warmups)
+    if reduce_keys is not None:
+        return _reduce_device(out[0], out[1], reduce_keys)
+    return out
+
+
+@functools.lru_cache(maxsize=4096)
+def _wparams_np(names: tuple, n_req: int):
+    """One spec's traced ``WorkloadParams`` as flat numpy leaves, cached
+    by the (names, n_req) pair that determines every leaf *except* the
+    stream seed (staged as seed=0; the caller overwrites the seed column
+    from the configs) — a 10⁵-point seed axis stages from ONE entry."""
+    from repro.workloads.profiles import spec_params
+    p = spec_params(WorkloadSpec(names=names, n_req=n_req, seed=0))
+    leaves, treedef = jax.tree_util.tree_flatten(p)
+    return tuple(np.asarray(x) for x in leaves), treedef
+
+
+@functools.lru_cache(maxsize=512)
+def _ilparams_np(il: InterleaveConfig):
+    leaves, treedef = jax.tree_util.tree_flatten(interleave_params(il))
+    return tuple(np.asarray(x) for x in leaves), treedef
+
+
+@functools.lru_cache(maxsize=4096)
+def _spec_total_len(names: tuple, n_req: int) -> int:
+    return int(WorkloadSpec(names=names, n_req=n_req).lengths().sum())
+
+
+def _stage_synth(grid: Sequence[SimConfig],
+                 shape_grid: Sequence[SimConfig] | None = None):
+    """Host staging of a synthetic launch: static facts + numpy-stacked
+    params (``MechParams`` / ``WorkloadParams`` / ``InterleaveParams`` /
+    warmups).  The §13 runner stages the full unique grid ONCE and
+    slices numpy views per chunk."""
+    from repro.workloads.profiles import max_len_of
+    grid = list(grid)
+    assert grid, "empty synthetic sweep grid"
+    shape_grid_l = (list(shape_grid) if shape_grid is not None
+                    else list(grid))
+    for cfg in grid + shape_grid_l:
+        assert cfg.workload is not None and cfg.workload.names, (
+            "sweep_synth needs cfg.workload set on every grid point")
+    n_cores = grid[0].workload.n_cores
+    for cfg in grid + shape_grid_l:
+        assert cfg.workload.n_cores == n_cores, (
+            "synthetic grids must share the core count")
+    shape, stacked = _grid_shape_and_params(grid, shape_grid)
+
+    max_len = max_len_of([cfg.workload for cfg in grid + shape_grid_l])
+    n_steps = n_cores * max_len
+    assert n_steps < 2**24, "workload too long for the int32 cycle horizon"
+
+    wstack = _stack_cached(
+        grid,
+        point_key=lambda cfg: (cfg.workload.names, cfg.workload.n_req),
+        point_leaves=lambda cfg: _wparams_np(cfg.workload.names,
+                                             cfg.workload.n_req))
+    seeds = np.asarray([cfg.workload.seed for cfg in grid], np.int32)
+    wstack = wstack._replace(
+        seed=np.ascontiguousarray(
+            np.broadcast_to(seeds[:, None], wstack.seed.shape)))
+    ilstack = _stack_cached(
+        grid,
+        point_key=lambda cfg: cfg.interleave,
+        point_leaves=lambda cfg: _ilparams_np(cfg.interleave))
+    # per-point warm-up, computed host-side from the spec's known
+    # request counts with the SAME ``int(frac * total)`` float
+    # arithmetic the materialized path uses — bitwise parity for any
+    # warmup_frac (the ``sweep_traces`` warmups pattern)
+    warmups = np.asarray(
+        [int(cfg.warmup_frac * _spec_total_len(cfg.workload.names,
+                                               cfg.workload.n_req))
+         for cfg in grid], np.int32)
+    return shape, n_cores, max_len, n_steps, stacked, wstack, ilstack, \
+        warmups
+
+
+def _launch_synth(shape, n_cores: int, max_len: int, stacked, wstack,
+                  ilstack, warmups, n_steps: int, collect_events: bool,
+                  n_grid: int, backend: str = "ref",
+                  reduce_keys: tuple | None = None):
+    """Async dispatch of one synthetic launch (unblocked device out)."""
+    if reduce_keys is not None:
+        collect_events = False
+    if backend == "pallas":
+        from repro.kernels.sim_step import ops as sim_step_ops
+        out = sim_step_ops.run_synth(
+            shape, n_cores, max_len, stacked, wstack, ilstack, warmups,
+            n_steps, collect_events)
+        if reduce_keys is not None:
+            return _reduce_jit(out[0], out[1], reduce_keys)
+        return out
+    (stacked, wstack, ilstack, warmups), _ = _shard_grid(
+        (stacked, wstack, ilstack, warmups), n_grid)
+    return _run_synth_batched(shape, n_cores, max_len, stacked, wstack,
+                              ilstack, warmups, n_steps, collect_events,
+                              reduce_keys)
+
+
+def _drain_synth(out, grid, n_grid: int,
+                 reduce_keys: tuple | None = None):
+    if reduce_keys is not None:
+        return np.asarray(out)[:n_grid]
+    raw_stats, core_end, events = out
+    stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}
+    core_np = np.asarray(core_end)
+    hist_np, total_np = _rltl_np(events)
+    return [
+        _finalize({k: v[g] for k, v in stats_np.items()}, core_np[g],
+                  (None, None) if hist_np is None
+                  else (hist_np[g], total_np[g]),
+                  grid[g].workload.lengths(), grid[g])
+        for g in range(n_grid)
+    ]
 
 
 def sweep_synth(grid: Sequence[SimConfig], rltl: bool = True,
-                shape_grid: Sequence[SimConfig] | None = None
-                ) -> list[dict]:
+                shape_grid: Sequence[SimConfig] | None = None,
+                reduce_keys: tuple | None = None):
     """Evaluate a *synthetic* config grid — every ``cfg.workload`` set —
     with per-point on-device stream generation (DESIGN.md §10).
 
@@ -1101,63 +1374,19 @@ def sweep_synth(grid: Sequence[SimConfig], rltl: bool = True,
     All specs must share the core count; per-core array length pads to
     the longest (traffic-scaled) spec across ``shape_grid``, padded
     steps being no-ops as usual.
+
+    With ``reduce_keys`` set (DESIGN.md §13) the launch reduces on
+    device and returns a ``[grid, len(reduce_keys)]`` int32 array.
     """
-    from repro.workloads.profiles import max_len_of, spec_params
     grid = list(grid)
-    assert grid, "empty synthetic sweep grid"
-    shape_grid_l = (list(shape_grid) if shape_grid is not None
-                    else list(grid))
-    for cfg in grid + shape_grid_l:
-        assert cfg.workload is not None and cfg.workload.names, (
-            "sweep_synth needs cfg.workload set on every grid point")
-    c0 = grid[0]
-    n_cores = c0.workload.n_cores
-    for cfg in grid + shape_grid_l:
-        assert cfg.workload.n_cores == n_cores, (
-            "synthetic grids must share the core count")
-    shape, stacked = _grid_shape_and_params(grid, shape_grid)
-
-    max_len = max_len_of([cfg.workload for cfg in grid + shape_grid_l])
-    n_steps = n_cores * max_len
-    assert n_steps < 2**24, "workload too long for the int32 cycle horizon"
-
-    wstack = jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs),
-        *[spec_params(cfg.workload) for cfg in grid])
-    ilstack = jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs),
-        *[interleave_params(cfg.interleave) for cfg in grid])
-    # per-point warm-up, computed host-side from the spec's known
-    # request counts with the SAME ``int(frac * total)`` float
-    # arithmetic the materialized path uses — bitwise parity for any
-    # warmup_frac (the ``sweep_traces`` warmups pattern)
-    warmups = jnp.asarray(
-        [int(cfg.warmup_frac * int(cfg.workload.lengths().sum()))
-         for cfg in grid], jnp.int32)
-
+    (shape, n_cores, max_len, n_steps, stacked, wstack, ilstack,
+     warmups) = _stage_synth(grid, shape_grid)
     n_grid = len(grid)
-    if _uniform_backend(grid) == "pallas":
-        from repro.kernels.sim_step import ops as sim_step_ops
-        raw_stats, core_end, events = sim_step_ops.run_synth(
-            shape, n_cores, max_len, stacked, wstack, ilstack, warmups,
-            n_steps, rltl)
-    else:
-        (stacked, wstack, ilstack, warmups), _ = _shard_grid(
-            (stacked, wstack, ilstack, warmups), n_grid)
-        raw_stats, core_end, events = _run_synth_batched(
-            shape, n_cores, max_len, stacked, wstack, ilstack, warmups,
-            n_steps, rltl)
-
-    stats_np = {k: np.asarray(v) for k, v in raw_stats.items()}
-    core_np = np.asarray(core_end)
-    hist_np, total_np = _rltl_np(events)
-    return [
-        _finalize({k: v[g] for k, v in stats_np.items()}, core_np[g],
-                  (None, None) if hist_np is None
-                  else (hist_np[g], total_np[g]),
-                  grid[g].workload.lengths(), grid[g])
-        for g in range(n_grid)
-    ]
+    out = _launch_synth(shape, n_cores, max_len, stacked, wstack,
+                        ilstack, warmups, n_steps, rltl, n_grid,
+                        backend=_uniform_backend(grid),
+                        reduce_keys=reduce_keys)
+    return _drain_synth(out, grid, n_grid, reduce_keys)
 
 
 def simulate_synth(cfg: SimConfig) -> dict:
@@ -1175,15 +1404,21 @@ def simulate_synth(cfg: SimConfig) -> dict:
 
 def sweep_serving(grid: Sequence[SimConfig],
                   shape_grid: Sequence[SimConfig] | None = None,
-                  counts=None, collect_steps: bool = False) -> list[dict]:
+                  counts=None, collect_steps: bool = False,
+                  reduce_keys: tuple | None = None):
     """Evaluate a *serving* config grid — every ``cfg.serving`` set —
     as one fused continuous-batching scan per point, vmapped across the
     grid (DESIGN.md §12).  The serving sibling of ``sweep_synth``; the
     engine lives in ``repro.serving.loop`` (which imports this core
-    layer), imported lazily to keep the module graph acyclic."""
+    layer), imported lazily to keep the module graph acyclic.
+
+    With ``reduce_keys`` set (keys from ``engine.SERVE_REDUCE_KEYS``)
+    the launch reduces on device and returns ``[grid, n_keys]`` int32.
+    """
     from repro.serving.loop import engine
     return engine.run_sweep(grid, shape_grid=shape_grid, counts=counts,
-                            collect_steps=collect_steps)
+                            collect_steps=collect_steps,
+                            reduce_keys=reduce_keys)
 
 
 def simulate_serving(cfg: SimConfig, counts=None,

@@ -14,7 +14,13 @@ Layers (DESIGN.md §7):
   ``sweep_synth()`` launches for ``Experiment(traces=None)``, the
   on-device workload-generation mode (DESIGN.md §10).
 - ``results``   — ``Results`` with labeled dims/coords: ``.sel()``,
-  ``.to_table()``, ``.to_json()`` / ``from_json()``.
+  ``.to_table()``, ``.to_json()`` / ``from_json()``; the streamed
+  layout + ``ResultsWriter`` JSONL sink (DESIGN.md §13).
+- ``metrics``   — the scalar-metric registry (``@register_metric``) and
+  streaming aggregations (``@register_aggregation``) that back both the
+  full-stats scalars and the ``Experiment(reduce=…)`` on-device
+  reduction contract.  (Implementation: ``repro.core.metrics`` — the
+  simulator's ``_finalize`` needs it; this is its public face.)
 
 ``spec``/``runner`` load lazily so that ``import repro.experiment``
 stays cheap when only the registry is needed.
@@ -30,7 +36,13 @@ _LAZY = {
     "AXIS_BUILDERS": "spec",
     "GEOMETRY_PRESETS": "spec",
     "Results": "results",
+    "ResultsWriter": "results",
     "run_experiment": "runner",
+    "ChunkScheduler": "runner",
+    "register_metric": "metrics",
+    "metric_names": "metrics",
+    "register_aggregation": "metrics",
+    "aggregation_names": "metrics",
 }
 
 __all__ = ["registry", "MechanismPolicy", "SelectCtx", "default_nuat_bins",

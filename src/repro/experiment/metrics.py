@@ -1,0 +1,20 @@
+"""Experiment-facing face of the metric registry (DESIGN.md §13).
+
+The registry itself lives in ``repro.core.metrics`` — the simulator's
+``_finalize`` consumes it, and ``repro.experiment`` imports ``repro.core``,
+never the reverse (the mechanism-registry layering rule).  Import from
+here in experiment/benchmark code::
+
+    from repro.experiment import metrics
+    @metrics.register_metric("bank_pressure", deps=("acts", "pres"))
+    def _bp(acts, pres): return acts / np.maximum(pres, 1)
+"""
+
+from repro.core.metrics import (Metric, aggregation_names, deps_for,
+                                finalize_scalars, make_aggregator,
+                                metric_names, register_aggregation,
+                                register_metric, resolve)
+
+__all__ = ["Metric", "register_metric", "metric_names", "resolve",
+           "deps_for", "finalize_scalars", "register_aggregation",
+           "aggregation_names", "make_aggregator"]

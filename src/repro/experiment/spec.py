@@ -237,6 +237,23 @@ class Experiment:
     - ``dedup``: launch each *behaviourally distinct* config once (grid
       points differing only in knobs their mechanism ignores — see
       ``registry.canonical_mech`` — share one run, bitwise-identically).
+    - ``reduce``: the streaming contract (DESIGN.md §13).  A tuple of
+      metric names (registered in ``repro.experiment.metrics`` or raw
+      reducible stat keys): each chunk launch lowers just those metrics'
+      integer ingredients on device and the host receives a
+      ``[chunk, n_deps]`` array — never a per-point stats pytree — and
+      assembles a *streamed* ``Results`` (``res.data``).  ``None`` (the
+      default) keeps the full-stats object-cell path, which remains the
+      parity oracle.  Incompatible with ``rltl`` / ``trace_metrics``.
+    - ``aggregate``: ``{result_name: (aggregation, metric)}`` streaming
+      reductions over the whole grid (``mean``/``min``/``max``/
+      ``argbest`` or any ``register_aggregation`` name), folded per
+      drained chunk and reported in ``meta["aggregates"]``; only valid
+      with ``reduce``.
+    - ``pipeline_depth``: chunk launches kept in flight per device
+      (JAX async dispatch) before the runner blocks on the oldest
+      drain — 0 = the fully blocking serial loop (the pre-§13
+      behaviour), 2 = the double-buffered default.
     """
     traces: Any
     axes: Mapping[str, Any] = dataclasses.field(default_factory=dict)
@@ -248,6 +265,9 @@ class Experiment:
     memory_budget_mb: float | None = None
     trace_metrics: Mapping[Any, Mapping[str, Any]] | None = None
     dedup: bool = True
+    reduce: Sequence[str] | None = None
+    aggregate: Mapping[str, tuple[str, str]] | None = None
+    pipeline_depth: int = 2
 
     def expand(self):
         """The config grid: ``(dims, coords, configs)`` with ``configs``
@@ -304,7 +324,21 @@ class Experiment:
             return True, list(enumerate(t))
         return False, [(None, t)]
 
-    def run(self, progress: Callable[[int, int], None] | None = None
-            ) -> Results:
+    def reduce_metrics(self) -> tuple[str, ...]:
+        """The metric names a ``reduce=`` run streams: the explicit
+        tuple, or — ``reduce=True`` shorthand — the experiment's
+        ``metrics`` declaration."""
+        assert self.reduce is not None
+        if self.reduce is True:
+            return tuple(self.metrics)
+        return tuple(self.reduce)
+
+    def run(self, progress: Callable[[int, int], None] | None = None,
+            stream_to: str | None = None) -> Results:
+        """Run the grid.  ``progress(done, total)`` is called after
+        every drained launch (monotone, mode-uniform — see
+        ``run_experiment``); ``stream_to`` additionally appends every
+        drained chunk to a ``ResultsWriter`` JSONL file at that path."""
         from repro.experiment.runner import run_experiment
-        return run_experiment(self, progress=progress)
+        return run_experiment(self, progress=progress,
+                              stream_to=stream_to)

@@ -43,6 +43,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import hcrac as hcl
+from repro.core import metrics as metrics_lib
 from repro.core import simulator as sim_mod
 from repro.serving.loop import policies as pol_mod
 from repro.serving.loop.spec import ServingSpec
@@ -50,7 +51,8 @@ from repro.workloads import arrivals as arr_mod
 from repro.workloads import prng
 
 __all__ = ["ServingShape", "ServingParams", "run_sweep",
-           "simulate_serving", "page_gid"]
+           "simulate_serving", "page_gid", "SERVE_REDUCE_KEYS",
+           "stage_serving"]
 
 # independent lanes for the page -> (hot gid, DRAM bank, DRAM row) maps
 _L_GID, _L_BANK, _L_ROW = prng.lanes(3)
@@ -126,6 +128,12 @@ class LoopState(NamedTuple):
 SERVE_STAT_KEYS = ("arrived", "dropped", "admitted", "retired",
                    "preempted", "admit_probes", "admit_hot",
                    "occ_sum", "qlen_sum")
+
+#: every key the serving launch can lower on device (DESIGN.md §13):
+#: the DRAM-side counters (``total_cycles`` = the final scheduler
+#: clock), the serving-loop counters, and the static step count (an
+#: ingredient of ``occ_mean``/``qlen_mean``).
+SERVE_REDUCE_KEYS = sim_mod.REDUCE_KEYS + SERVE_STAT_KEYS + ("n_steps",)
 
 
 def _init_loop_state(shape: ServingShape) -> LoopState:
@@ -344,27 +352,53 @@ def _run_serving_impl(shape: ServingShape, p: ServingParams, warmup,
     return final.sim.stats, final.stats, final.now, ys
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
+def _serve_reduce(shape: ServingShape, sim_stats, serve_stats, now,
+                  reduce_keys):
+    """[grid, len(reduce_keys)] i32 column stack — the serving form of
+    ``simulator._reduce_device`` (``total_cycles`` is the final clock,
+    ``n_steps`` the static horizon)."""
+    cols = []
+    for k in reduce_keys:
+        if k == "total_cycles":
+            cols.append(now)
+        elif k == "n_steps":
+            cols.append(jnp.full_like(now, shape.n_steps))
+        elif k in serve_stats:
+            cols.append(serve_stats[k])
+        else:
+            cols.append(sim_stats[k])
+    return jnp.stack(cols, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 3))
 def _run_serving_batched(shape: ServingShape, params: ServingParams,
-                         warmups):
+                         warmups, reduce_keys=None):
     """The serving grid engine: arrivals drawn on device per point.
     All ``params`` leaves and ``warmups`` carry a leading [grid] axis;
     one compilation serves every (policy, arrival, mechanism, geometry)
     point — the one-compile fact ``benchmarks/serving_loop.py`` asserts.
+    With ``reduce_keys`` (static) set, the on-device §13 reduction runs
+    inside the same compiled program.
     """
-    return jax.vmap(
+    out = jax.vmap(
         lambda p, w: _run_serving_impl(shape, p, w, None))(
         params, warmups)
+    if reduce_keys is None:
+        return out
+    return _serve_reduce(shape, out[0], out[1], out[2], reduce_keys)
 
 
-@functools.partial(jax.jit, static_argnums=(0,))
+@functools.partial(jax.jit, static_argnums=(0, 4))
 def _run_serving_pinned(shape: ServingShape, params: ServingParams,
-                        warmups, counts):
+                        warmups, counts, reduce_keys=None):
     """Pinned-arrival variant: per-point [grid, n_steps] counts override
     the drawn process (the host-parity harness)."""
-    return jax.vmap(
+    out = jax.vmap(
         lambda p, w, c: _run_serving_impl(shape, p, w, c))(
         params, warmups, counts)
+    if reduce_keys is None:
+        return out
+    return _serve_reduce(shape, out[0], out[1], out[2], reduce_keys)
 
 
 def _resolve_static(specs: Sequence[ServingSpec],
@@ -392,28 +426,26 @@ def _resolve_static(specs: Sequence[ServingSpec],
     )
 
 
-def _point_rest(cfg) -> _RestParams:
-    sp = cfg.serving
-    return _RestParams(
+@functools.lru_cache(maxsize=4096)
+def _point_rest_np(sp: ServingSpec):
+    """One spec's non-mech traced params as flat numpy leaves, cached by
+    the (hashable) ``ServingSpec`` — a 10⁵-point grid over a few dozen
+    distinct serving specs stages from that many cache entries."""
+    r = _RestParams(
         arrival=arr_mod.arrival_params(sp.arrival, sp.n_reqs),
         hot=hcl.params_of(sp.hot_cfg()),
         policy=pol_mod.build_blocks(sp),
         cycles_per_step=jnp.int32(sp.cycles_per_step),
         page_tokens=jnp.int32(sp.page_tokens),
     )
+    leaves, treedef = jax.tree_util.tree_flatten(r)
+    return tuple(np.asarray(x) for x in leaves), treedef
 
 
-def run_sweep(grid, shape_grid=None, counts=None,
-              collect_steps: bool = False) -> list:
-    """Evaluate a serving config grid — every ``cfg.serving`` set — as
-    one vmapped fused scan (the serving analogue of ``sweep_synth``).
-
-    ``shape_grid`` pads static facts for a larger grid than launched
-    (the experiment runner's chunking mode), ``counts`` pins the
-    per-step arrival schedule ([n_steps] shared or [G, n_steps]) for
-    the host-parity harness, and ``collect_steps`` returns per-step
-    (occupancy, queue length, arrivals) arrays per point.
-    """
+def stage_serving(grid, shape_grid=None, collect_steps: bool = False):
+    """Host staging of a serving launch: the static ``ServingShape``
+    plus numpy-stacked ``ServingParams``/warmups (the §13 runner stages
+    the unique grid once and slices numpy views per chunk)."""
     grid = list(grid)
     assert grid, "empty serving sweep grid"
     shape_grid_l = list(shape_grid) if shape_grid is not None else grid
@@ -434,41 +466,52 @@ def run_sweep(grid, shape_grid=None, counts=None,
         "serving clock exceeds the int32 cycle horizon — lower n_steps "
         "or cycles_per_step")
 
-    rest = jax.tree_util.tree_map(
-        lambda *xs: jnp.stack(xs), *[_point_rest(cfg) for cfg in grid])
+    rest = sim_mod._stack_cached(
+        grid,
+        point_key=lambda cfg: cfg.serving,
+        point_leaves=lambda cfg: _point_rest_np(cfg.serving))
     params = ServingParams(mech=mech_stacked, arrival=rest.arrival,
                            hot=rest.hot, policy=rest.policy,
                            cycles_per_step=rest.cycles_per_step,
                            page_tokens=rest.page_tokens)
     # steps-based warmup: the measured window of the DRAM-side stats
-    warmups = jnp.asarray(
-        [int(cfg.warmup_frac * n_steps) for cfg in grid], jnp.int32)
+    warmups = np.asarray(
+        [int(cfg.warmup_frac * n_steps) for cfg in grid], np.int32)
+    return shape, params, warmups
 
-    n_grid = len(grid)
+
+def _launch_serving(shape: ServingShape, params: ServingParams, warmups,
+                    counts, n_grid: int, reduce_keys: tuple | None = None):
+    """Async dispatch of one serving launch (unblocked device out)."""
     if counts is not None:
         counts = np.asarray(counts, np.int32)
         if counts.ndim == 1:
             counts = np.broadcast_to(counts, (n_grid,) + counts.shape)
-        assert counts.shape == (n_grid, n_steps), (
-            f"pinned counts must be [n_steps={n_steps}] or "
+        assert counts.shape == (n_grid, shape.n_steps), (
+            f"pinned counts must be [n_steps={shape.n_steps}] or "
             f"[G={n_grid}, n_steps]; got {counts.shape}")
-        counts = jnp.asarray(counts)
+        counts = np.ascontiguousarray(counts)
         (params, warmups, counts), _ = sim_mod._shard_grid(
             (params, warmups, counts), n_grid)
-        sim_stats, serve_stats, final_now, ys = _run_serving_pinned(
-            shape, params, warmups, counts)
-    else:
-        (params, warmups), _ = sim_mod._shard_grid(
-            (params, warmups), n_grid)
-        sim_stats, serve_stats, final_now, ys = _run_serving_batched(
-            shape, params, warmups)
+        return _run_serving_pinned(shape, params, warmups, counts,
+                                   reduce_keys)
+    (params, warmups), _ = sim_mod._shard_grid(
+        (params, warmups), n_grid)
+    return _run_serving_batched(shape, params, warmups, reduce_keys)
 
+
+def _drain_serving(out, grid, shape: ServingShape, n_grid: int,
+                   reduce_keys: tuple | None = None):
+    if reduce_keys is not None:
+        return np.asarray(out)[:n_grid]
+    sim_stats, serve_stats, final_now, ys = out
     sim_np = {k: np.asarray(v) for k, v in sim_stats.items()}
     serve_np = {k: np.asarray(v) for k, v in serve_stats.items()}
     now_np = np.asarray(final_now)
     ys_np = (None if ys is None
              else tuple(np.asarray(y) for y in ys))
-    out = []
+    n_steps = shape.n_steps
+    out_rows = []
     for g in range(n_grid):
         res = sim_mod._finalize(
             {k: v[g] for k, v in sim_np.items()}, now_np[g:g + 1],
@@ -476,15 +519,40 @@ def run_sweep(grid, shape_grid=None, counts=None,
         for k in SERVE_STAT_KEYS:
             res[k] = int(serve_np[k][g])
         res["n_steps"] = n_steps
-        res["admit_hot_rate"] = (res["admit_hot"]
-                                 / max(res["admit_probes"], 1))
-        res["occ_mean"] = res["occ_sum"] / n_steps
-        res["qlen_mean"] = res["qlen_sum"] / n_steps
+        # derived serving scalars come from the same registry table the
+        # reduce path applies — one formula source (DESIGN.md §13)
+        metrics_lib.finalize_scalars(res)
         if ys_np is not None:
             res["steps"] = {"occ": ys_np[0][g], "qlen": ys_np[1][g],
                             "arrivals": ys_np[2][g]}
-        out.append(res)
-    return out
+        out_rows.append(res)
+    return out_rows
+
+
+def run_sweep(grid, shape_grid=None, counts=None,
+              collect_steps: bool = False,
+              reduce_keys: tuple | None = None):
+    """Evaluate a serving config grid — every ``cfg.serving`` set — as
+    one vmapped fused scan (the serving analogue of ``sweep_synth``).
+
+    ``shape_grid`` pads static facts for a larger grid than launched
+    (the experiment runner's chunking mode), ``counts`` pins the
+    per-step arrival schedule ([n_steps] shared or [G, n_steps]) for
+    the host-parity harness, and ``collect_steps`` returns per-step
+    (occupancy, queue length, arrivals) arrays per point.  With
+    ``reduce_keys`` (entries of ``SERVE_REDUCE_KEYS``) the launch
+    reduces on device and returns ``[grid, n_keys]`` int32 (per-step
+    arrays are never collected in this mode).
+    """
+    grid = list(grid)
+    if reduce_keys is not None:
+        collect_steps = False
+    shape, params, warmups = stage_serving(grid, shape_grid,
+                                           collect_steps)
+    n_grid = len(grid)
+    out = _launch_serving(shape, params, warmups, counts, n_grid,
+                          reduce_keys)
+    return _drain_serving(out, grid, shape, n_grid, reduce_keys)
 
 
 def simulate_serving(cfg, counts=None, collect_steps: bool = True) -> dict:

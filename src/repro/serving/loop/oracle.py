@@ -29,7 +29,8 @@ from repro.serving.loop.spec import ServingSpec
 from repro.serving.scheduler import Request, Scheduler, SchedulerConfig
 from repro.workloads.arrivals import arrival_params, request_attrs
 
-__all__ = ["HashedScheduler", "scheduler_config", "run_host"]
+__all__ = ["HashedScheduler", "scheduler_config", "run_host",
+           "run_host_grid"]
 
 
 class HashedScheduler(Scheduler):
@@ -78,3 +79,21 @@ def run_host(spec: ServingSpec, counts: np.ndarray):
         occ.append(len(s.active))
         s.step()  # re-runs _admit (a no-op), decodes, retires
     return s, np.asarray(occ)
+
+
+def run_host_grid(specs, counts: np.ndarray):
+    """Multi-schedule oracle: drive one host scheduler per (spec,
+    schedule) pair and return the list of ``(scheduler, occ)`` results.
+
+    ``counts`` is ``[n_steps]`` (broadcast to every spec — the old
+    single-schedule shape) or ``[G, n_steps]`` with one pinned schedule
+    per grid point, matching ``sweep_serving(grid, counts=...)``'s
+    per-point counts contract so a whole parity grid is checked in one
+    traced launch against G independent host replays."""
+    specs = list(specs)
+    counts = np.asarray(counts, np.int32)
+    if counts.ndim == 1:
+        counts = np.broadcast_to(counts, (len(specs),) + counts.shape)
+    assert counts.shape[0] == len(specs), (
+        f"need one schedule per spec: {counts.shape[0]} != {len(specs)}")
+    return [run_host(sp, counts[g]) for g, sp in enumerate(specs)]

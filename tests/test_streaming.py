@@ -1,0 +1,240 @@
+"""Streaming mega-sweep engine tests (DESIGN.md §13).
+
+Pillars:
+
+* **Reduce parity** — ``Experiment(reduce=...)`` streamed metrics are
+  bitwise-equal to the full-stats object-cell path, parametrized over
+  all three launch modes (trace / synth / serving) × every registered
+  metric valid in that mode (plus raw reducible stat keys);
+* **Chunked + pipelined parity** — splitting the unique grid into many
+  pipelined launches changes nothing, and all launches share one
+  compilation;
+* **Streamed Results semantics** — ``.sel``/``.metric``/``.pairwise``
+  behave identically on the streamed layout, JSONL round-trips
+  (float axis labels included), and the writer's coverage contract;
+* **Progress contract** — ``progress(done, total)`` is monotone,
+  mode-uniform (trace launches advance ``len(batches) × n_valid``,
+  serving/synth ``n_valid``), and ends exactly at ``total``;
+* **Aggregations** — streaming mean/min/max/argbest fold per chunk to
+  the same values a dense pass computes.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import simulator as sim_mod
+from repro.core.simulator import SimConfig
+from repro.core.traces import WorkloadSpec, multicore_batch, \
+    single_core_batch
+from repro.experiment import metrics as metrics_lib, registry
+from repro.experiment.results import Results, ResultsWriter
+from repro.experiment.spec import Experiment
+from repro.serving.loop import ServingSpec, engine as serve_eng
+from repro.workloads.arrivals import ArrivalConfig
+
+
+def _serving_spec(policy: str = "fifo") -> ServingSpec:
+    return ServingSpec(
+        policy=policy,
+        arrival=ArrivalConfig(rate=1.5, burstiness=1.0,
+                              prompt_pages_min=1, prompt_pages_max=2,
+                              decode_min=4, decode_max=12, seed=7),
+        n_reqs=24, max_batch=4, queue_cap=32, arrivals_max=4,
+        n_steps=96, cycles_per_step=4000,
+        hot_entries=1018, hot_ways=2, hot_caching_ms=0.05, hot_exact=True)
+
+
+def _experiment(mode: str, **kw) -> Experiment:
+    """A small grid in each launch mode (chunk_size=2 forces several
+    launches).  The sim modes sweep EVERY registered mechanism
+    (`registry.names()`), so a future mechanism inherits the
+    streamed-vs-materialized parity gate for free; serving sweeps every
+    registered serving policy."""
+    if mode == "trace":
+        traces = {"a": multicore_batch(["stream_copy_like", "tpcc64_like"],
+                                       n_req=64, seed=0),
+                  "b": multicore_batch(["stream_triad_like", "hmmer_like"],
+                                       n_req=64, seed=1)}
+        return Experiment(traces=traces,
+                          axes={"mechanism": registry.names(),
+                                "capacity": (32, 1024)},
+                          chunk_size=2, **kw)
+    if mode == "synth":
+        base = SimConfig(workload=WorkloadSpec(
+            names=("stream_copy_like",), n_req=64, seed=0))
+        return Experiment(traces=None, base=base,
+                          axes={"workload": {"copy": ["stream_copy_like"],
+                                             "triad": ["stream_triad_like"]},
+                                "mechanism": registry.names()},
+                          chunk_size=2, **kw)
+    assert mode == "serving"
+    return Experiment(traces=None, base=SimConfig(serving=_serving_spec()),
+                      axes={"policy": ["fifo", "charge_aware",
+                                       "preempting"],
+                            "arrival_rate": (0.5, 2.0)},
+                      chunk_size=2, **kw)
+
+
+def _valid_metrics(mode: str) -> tuple[str, ...]:
+    """Every registered metric whose ingredient deps the mode can lower,
+    plus a couple of raw reducible keys (identity-metric fallback)."""
+    avail = (serve_eng.SERVE_REDUCE_KEYS if mode == "serving"
+             else sim_mod.REDUCE_KEYS)
+    names = []
+    for n in metrics_lib.metric_names():
+        try:
+            metrics_lib.resolve([n], avail)
+        except AssertionError:
+            continue
+        names.append(n)
+    return tuple(names) + ("total_cycles", "acts")
+
+
+@pytest.mark.parametrize("mode", ["trace", "synth", "serving"])
+def test_streamed_vs_materialized_bitwise(mode):
+    """reduce= streams every registered metric bitwise-equal to the
+    full-stats path, in every launch mode (the §13 parity pillar);
+    the streamed layout's sel/pairwise agree with the materialized
+    object cells."""
+    names = _valid_metrics(mode)
+    full = _experiment(mode).run()
+    red = _experiment(mode, reduce=names).run()
+    assert red.streamed and not full.streamed
+    assert red.metrics == names
+    for m in names:
+        want = full.metric(m)
+        got = red.metric(m)
+        assert np.array_equal(got, want), (m, got, want)
+    # identical semantics: label selection + pairwise on both layouts
+    dim = red.dims[0]
+    a, b = red.coords[dim][0], red.coords[dim][1]
+    key = names[0]
+    assert np.array_equal(red.sel(**{dim: b}).metric(key),
+                          full.sel(**{dim: b}).metric(key))
+    fn = lambda base, s: s[key] - base[key]
+    pw_red = red.pairwise(dim, a, fn)
+    pw_full = full.pairwise(dim, a, fn)
+    assert np.array_equal(pw_red[b], pw_full[b])
+
+
+def test_chunked_pipelined_one_compile():
+    """Many pipelined chunk launches share exactly one reduce-path
+    compilation (the shape_grid padding + staged-params contract
+    surviving the §13 rewrite)."""
+    exp = _experiment("trace", reduce=("avg_latency", "total_cycles"))
+    before = sim_mod._run_grid._cache_size()
+    res = exp.run()
+    assert sim_mod._run_grid._cache_size() - before == 1
+    assert res.meta["n_chunks"] >= 2
+    # depth-0 (blocking serial) is bitwise the same run
+    res0 = _experiment("trace", reduce=("avg_latency", "total_cycles"),
+                       pipeline_depth=0).run()
+    for m in res.metrics:
+        assert np.array_equal(res.metric(m), res0.metric(m))
+
+
+@pytest.mark.parametrize("mode", ["trace", "synth", "serving"])
+def test_progress_contract(mode):
+    """progress(done, total) is monotone, ends at exactly total, and
+    advances mode-uniformly: a trace-mode launch drains its whole
+    trace-row block (len(batches) × n_valid), serving/synth n_valid."""
+    calls = []
+    res = _experiment(mode).run(progress=lambda d, t: calls.append((d, t)))
+    total = res.meta["n_unique"] * (
+        len(res.coords["trace"]) if mode == "trace" else 1)
+    assert all(t == total for _, t in calls)
+    assert calls[-1][0] == total
+    dones = [d for d, _ in calls]
+    assert all(x < y for x, y in zip(dones, dones[1:]))
+    assert len(calls) == res.meta["n_launches"]
+    # mode-uniform increments
+    chunk = res.meta["chunk_size"]
+    n_unique = res.meta["n_unique"]
+    n_valid = [min(chunk, n_unique - i * chunk)
+               for i in range(res.meta["n_chunks"])]
+    n_rows = len(res.coords["trace"]) if mode == "trace" else 1
+    expect = [nv * n_rows for nv in n_valid]
+    steps = [b - a for a, b in zip([0] + dones, dones)]
+    assert steps == expect, (steps, expect)
+
+
+def test_streamed_jsonl_roundtrip_and_aggregates(tmp_path):
+    """A reduced chunked run streams to JSONL; reading it back restores
+    the streamed layout bitwise (float axis labels included), and the
+    per-chunk streaming aggregations equal a dense recomputation."""
+    path = str(tmp_path / "stream.jsonl")
+    exp = Experiment(
+        traces=None,
+        base=SimConfig(workload=WorkloadSpec(
+            names=("stream_copy_like",), n_req=64, seed=0)),
+        axes={"mechanism": ["base", "chargecache"],
+              "duration_ms": (0.5, 1.0, 8.0)},   # float coordinate labels
+        chunk_size=2,
+        reduce=("avg_latency", "row_hit_rate"),
+        aggregate={"best": ("argbest", "avg_latency"),
+                   "mean_lat": ("mean", "avg_latency"),
+                   "lo": ("min", "avg_latency"),
+                   "hi": ("max", "row_hit_rate")})
+    res = exp.run(stream_to=path)
+    back = Results.from_jsonl(path)
+    assert back.dims == res.dims
+    assert back.coords["duration_ms"] == (0.5, 1.0, 8.0)
+    for m in res.metrics:
+        assert np.array_equal(back.metric(m), res.metric(m))
+
+    lat = res.metric("avg_latency")
+    agg = res.meta["aggregates"]
+    assert agg["mean_lat"] == float(np.mean(lat))
+    assert agg["lo"] == float(np.min(lat))
+    assert agg["hi"] == float(np.max(res.metric("row_hit_rate")))
+    fi = int(np.argmin(lat.reshape(-1)))
+    assert agg["best"]["flat_index"] == fi
+    assert agg["best"]["value"] == float(lat.reshape(-1)[fi])
+    idx = np.unravel_index(fi, res.shape)
+    assert agg["best"]["coords"] == {
+        d: res.coords[d][int(i)] for d, i in zip(res.dims, idx)}
+    # the trailer carries the aggregates too
+    assert back.meta["aggregates"]["mean_lat"] == agg["mean_lat"]
+
+
+def test_full_stats_stream_to(tmp_path):
+    """stream_to works in full-stats (non-reduce) mode too: the JSONL
+    stream carries the declared metrics of every grid point."""
+    path = str(tmp_path / "full.jsonl")
+    exp = _experiment("trace")
+    res = exp.run(stream_to=path)
+    back = Results.from_jsonl(path)
+    for m in res.metrics:
+        assert np.array_equal(back.metric(m), res.metric(m))
+
+
+def test_writer_coverage_contract(tmp_path):
+    """from_jsonl refuses a stream that missed grid points or wrote one
+    twice — silent partial grids must not parse as complete."""
+    path = str(tmp_path / "partial.jsonl")
+    dims, coords = ("x",), {"x": (1, 2, 3)}
+    w = ResultsWriter(path, dims, coords, ("m",))
+    w.write([0, 1], [[1.0], [2.0]])
+    w.close()
+    with pytest.raises(AssertionError, match="covered"):
+        Results.from_jsonl(path)
+    path2 = str(tmp_path / "dup.jsonl")
+    w = ResultsWriter(path2, dims, coords, ("m",))
+    w.write([0, 1], [[1.0], [2.0]])
+    w.write([1, 2], [[2.0], [3.0]])  # duplicate index 1: caught on read
+    w.close()
+    with pytest.raises(AssertionError, match="twice"):
+        Results.from_jsonl(path2)
+
+
+def test_reduce_rejects_full_stats_only_features():
+    """rltl histograms and trace_metrics extras need per-point pytrees —
+    reduce= must refuse them loudly, not drop them silently."""
+    batch = single_core_batch("milc_like", 64, seed=0)
+    with pytest.raises(AssertionError, match="RLTL"):
+        Experiment(traces=batch, axes={"mechanism": ["base"]},
+                   rltl=True, reduce=("avg_latency",)).run()
+    with pytest.raises(AssertionError, match="trace_metrics"):
+        Experiment(traces={"t": batch}, axes={"mechanism": ["base"]},
+                   trace_metrics={"t": {"extra": 1.0}},
+                   reduce=("avg_latency",)).run()
