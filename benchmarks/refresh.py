@@ -1,0 +1,132 @@
+"""Stateful rolling refresh + thermal drift: the DESIGN.md §14 study.
+
+One ``Experiment`` runs the full mechanism x refresh-tier x
+refresh-pressure x temperature-drift matrix over an 8-profile synthetic
+mix — every knob traced (``refresh_stateful`` / ``ThermalParams`` are
+``MechParams`` leaves, the pressure axis is just a ``TimingParams``
+sweep), so the whole study costs ONE XLA compilation (asserted).
+
+The physics the numbers must show (asserted below):
+
+* the stateful tier spends a ``tRFC/tREFI``-scale fraction of the run
+  behind REF blackouts, and that fraction grows under DDR4-style 2x/4x
+  refresh pressure (``timing.with_refresh_pressure``);
+* refresh pressure shrinks the retention window, so rows are younger on
+  average — the charge-headroom mechanisms (NUAT) gain speedup and the
+  thesis's refreshed-recently ACT fraction rises toward 8ms/16ms;
+* AL-DRAM under a heating drift schedule loses its margin (ramp runs
+  slower than a cool stream), while drift-blind mechanisms dedup.
+
+Emits ``BENCH_refresh.json`` with flat headline numbers (trajectory-
+visible) plus the full cell table.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common as C
+from repro.core.timing import DDR3_1600, with_refresh_pressure
+from repro.experiment.spec import AXIS_BUILDERS
+
+# the pressure axis is the timing axis under a friendlier label
+AXIS_BUILDERS.setdefault("pressure", AXIS_BUILDERS["timing"])
+
+REFRESH_JSON = C.artifact_path(
+    os.environ.get("REPRO_BENCH_REFRESH_JSON", "BENCH_refresh.json"))
+
+MECHS = ("base", "chargecache", "nuat", "aldram")
+PRESSURES = {"1x": DDR3_1600, "4x": with_refresh_pressure(DDR3_1600, 4)}
+DRIFTS = ("none", "ramp")
+
+
+def refresh_grid():
+    """(mechanism x refresh_mode x pressure x drift) over one synthetic
+    multicore mix, streamed on device — one compilation for the whole
+    matrix (drift-blind and legacy-identical points dedup away)."""
+    return C.compile_counted(
+        C.experiment_synth,
+        axes={"mechanism": list(MECHS),
+              "refresh_mode": ["legacy", "stateful"],
+              "pressure": PRESSURES,
+              "temp_drift": list(DRIFTS)},
+        n_cores=4)
+
+
+def run() -> list[str]:
+    (res, compiles), us = C.timed(refresh_grid)
+    assert compiles == 1, (
+        f"the mechanism x refresh x pressure x drift grid must ride one "
+        f"compilation, got {compiles}")
+
+    cell = lambda **kw: res.sel(**kw).cells.flat[0]
+
+    def base_cell(rm, pr):
+        return cell(mechanism="base", refresh_mode=rm, pressure=pr,
+                    temp_drift="none")
+
+    # --- REF blackout share: stateful only, growing with pressure ------
+    blocked = {pr: float(base_cell("stateful", pr)["ref_blocked_frac"])
+               for pr in PRESSURES}
+    assert float(base_cell("legacy", "1x")["ref_blocked_frac"]) == 0.0
+    assert 0.0 < blocked["1x"] < blocked["4x"], blocked
+
+    # --- refreshed-recently ACT share rises as the window shrinks ------
+    ref8 = {}
+    for pr in PRESSURES:
+        s = base_cell("stateful", pr)
+        ref8[pr] = float(s["refresh8ms_acts"]) / max(float(s["acts"]), 1.0)
+    assert ref8["4x"] > ref8["1x"], ref8
+
+    # --- mechanism speedups per (refresh tier, pressure) ---------------
+    speedup = {
+        rm: {pr: C.mech_speedups(
+                res.sel(refresh_mode=rm, pressure=pr, temp_drift="none"))
+             for pr in PRESSURES}
+        for rm in ("legacy", "stateful")}
+    # shrinking the retention window leaves rows younger on average, so
+    # the charge-headroom mechanism's opportunity must grow with pressure
+    nuat = speedup["stateful"]
+    assert nuat["4x"]["nuat"] > nuat["1x"]["nuat"] - 1e-9, nuat
+
+    # --- drift: a heating schedule costs AL-DRAM its margin ------------
+    al = {d: int(cell(mechanism="aldram", refresh_mode="stateful",
+                      pressure="1x", temp_drift=d)["total_cycles"])
+          for d in DRIFTS}
+    bs = {d: int(cell(mechanism="base", refresh_mode="stateful",
+                      pressure="1x", temp_drift=d)["total_cycles"])
+          for d in DRIFTS}
+    assert bs["none"] == bs["ramp"], bs       # drift-blind dedup
+    assert al["none"] <= al["ramp"] <= bs["ramp"], (al, bs)
+
+    doc = {
+        # flat headline numbers -> BENCH_trajectory.json
+        "compiles": compiles,
+        "ref_blocked_frac_1x": blocked["1x"],
+        "ref_blocked_frac_4x": blocked["4x"],
+        "refresh8ms_frac_1x": ref8["1x"],
+        "refresh8ms_frac_4x": ref8["4x"],
+        "nuat_speedup_1x": nuat["1x"]["nuat"],
+        "nuat_speedup_4x": nuat["4x"]["nuat"],
+        "cc_speedup_1x": nuat["1x"]["chargecache"],
+        "aldram_drift_slowdown": al["ramp"] / max(al["none"], 1),
+        "speedup": speedup,
+        "cells": res.to_table(),
+        "meta": res.meta,
+    }
+    with open(REFRESH_JSON, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+
+    return [C.csv_row(
+        "refresh_pressure_drift", us,
+        f"compiles={compiles};blocked_1x={blocked['1x']:.4f}"
+        f";blocked_4x={blocked['4x']:.4f};ref8_4x={ref8['4x']:.4f}"
+        f";nuat_1x={nuat['1x']['nuat']:.4f}"
+        f";nuat_4x={nuat['4x']['nuat']:.4f}"
+        f";aldram_drift={al['ramp'] / max(al['none'], 1):.4f}")]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

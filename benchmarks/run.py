@@ -129,7 +129,7 @@ def main() -> None:
         return
     from benchmarks import (aldram, capacity, charge_model_bench, duration,
                             energy, geometry, kernels_bench, megasweep,
-                            rltl, roofline_bench, serving_loop,
+                            refresh, rltl, roofline_bench, serving_loop,
                             serving_trace, simstep_bench, speedup,
                             sweep_bench, workloads)
     # (name, module, declared BENCH_* artifacts the module must emit)
@@ -143,6 +143,7 @@ def main() -> None:
         ("duration", duration, ()),
         ("geometry", geometry, ("BENCH_geometry.json",)),
         ("aldram", aldram, ("BENCH_aldram.json",)),
+        ("refresh", refresh, ("BENCH_refresh.json",)),
         ("workloads", workloads, ("BENCH_workloads.json",)),
         ("simstep", simstep_bench, ("BENCH_simstep.json",)),
         ("serving", serving_trace, ()),

@@ -29,11 +29,12 @@ simulator can address (the §8 masking invariant).
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import numpy as np
 
 from repro.core import charge_model
-from repro.core.timing import TimingParams
+from repro.core.timing import TimingParams, ms_to_cycles
 
 #: DDR3 spec guardband temperature: the margin vanishes here by design.
 TEMP_REFERENCE_C = 85.0
@@ -89,6 +90,67 @@ def _bank_penalty(seed: int, n_banks: int, max_penalty: int) -> np.ndarray:
     h *= np.uint64(0x94D049BB133111EB)
     h ^= h >> np.uint64(29)
     return (h % np.uint64(max_penalty + 1)).astype(np.int64)
+
+
+@dataclasses.dataclass(frozen=True)
+class ThermalConfig:
+    """A piecewise-constant temperature schedule along the stream.
+
+    ``points`` is a sorted tuple of ``(start_ms, temperature_c)``
+    segments; the first segment must start at 0 ms.  Empty ``points``
+    means *no drift*: the module sits at its static
+    ``ALDRAMConfig.temperature_c`` and every drift branch in the
+    simulator is gated off, so a no-drift point is bitwise identical to
+    the pre-drift engine (DESIGN.md §14).  Hashable — it rides the
+    experiment runner's dedup key inside ``MechanismConfig``.
+    """
+    points: tuple = ()   # ((start_ms, temp_c), ...)
+
+    def __post_init__(self):
+        pts = tuple((float(ms), float(tc)) for ms, tc in self.points)
+        object.__setattr__(self, "points", pts)
+        if pts:
+            assert pts[0][0] == 0.0, "first thermal segment must start at 0 ms"
+            starts = [ms for ms, _ in pts]
+            assert starts == sorted(starts), "thermal segments must be sorted"
+
+    @property
+    def n_segs(self) -> int:
+        return len(self.points)
+
+    def temps(self) -> tuple:
+        return tuple(tc for _, tc in self.points)
+
+
+class ThermalParams(NamedTuple):
+    """Traced half of a thermal schedule: per-segment start cycles and
+    leak-rate multipliers ``2**((T - 85) / 10)``, padded to the grid-wide
+    segment count ``S`` (``seg_edge`` padded with ``2**30`` so padded
+    segments are never selected).  ``S == 0`` leaves are the static
+    no-drift gate: the simulator skips segment selection entirely."""
+    enable: object       # bool scalar — this point drifts
+    seg_edge: object     # i32 [S] segment start cycles
+    seg_leak: object     # f32 [S] leak-rate multiplier per segment
+
+
+def thermal_leak_scale(temperature_c: float) -> float:
+    """Leak-rate multiplier vs the 85°C guardband: the same doubling law
+    as ``equivalent_idle_ms``, applied to the running leak clock."""
+    return 2.0 ** ((temperature_c - TEMP_REFERENCE_C) / LEAKAGE_DOUBLING_C)
+
+
+def thermal_params_np(th: ThermalConfig, n_segs: int):
+    """Numpy leaves of one point's ``ThermalParams``, padded to the
+    grid-wide ``n_segs`` (position-stable: real segments first, padding
+    starts at the never-reached cycle ``2**30`` and repeats the last
+    real leak scale)."""
+    S = int(n_segs)
+    edge = np.full(S, np.int32(2**30), np.int32)
+    leak = np.ones(S, np.float32)
+    for i, (ms, tc) in enumerate(th.points):
+        edge[i] = np.int32(ms_to_cycles(ms))
+        leak[i:] = np.float32(thermal_leak_scale(tc))
+    return np.asarray(th.n_segs > 0), edge, leak
 
 
 def per_bank_timings(ald: ALDRAMConfig, timing: TimingParams,

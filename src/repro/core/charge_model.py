@@ -108,6 +108,11 @@ def t_ready_ns_numeric(idle_ms: float) -> float:
     """
     times, v = bitline_waveform(idle_ms)
     crossed = v >= VHALF + V_READY_MARGIN
+    if not bool(crossed.any()):
+        # argmax of an all-False mask is 0 — returning times[0] + T0_NS
+        # would report a *minimal* ready time for a waveform that never
+        # crossed the margin inside the integration window
+        return float("inf")
     idx = jnp.argmax(crossed)
     return float(times[idx]) + T0_NS
 

@@ -264,10 +264,44 @@ def time_since_refresh(geom, timing, row, t):
     return jnp.mod(t - phase, jnp.asarray(timing.retention_cycles, jnp.int32))
 
 
-def refresh_adjust(timing, t):
+def refresh_adjust(timing, t, row=None):
     """Earliest cycle >= t at which a bank command may issue, accounting for
-    the all-bank refresh that occupies the first ``tRFC`` cycles of every
-    ``tREFI`` window."""
-    r = jnp.mod(t, jnp.asarray(timing.tREFI, jnp.int32))
+    the refresh that occupies the first ``tRFC`` cycles of every ``tREFI``
+    window (the legacy closed-form tier; DESIGN.md §14).
+
+    With ``row`` given, only commands to the refresh *group* being
+    restored in the current window stall — window ``k`` refreshes group
+    ``k mod n_refresh_groups``, matching ``time_since_refresh``'s rolling
+    schedule.  ``row=None`` keeps the pre-PR-9 all-bank blackout.
+    """
+    tREFI = jnp.asarray(timing.tREFI, jnp.int32)
+    r = jnp.mod(t, tREFI)
     busy = r < timing.tRFC
+    if row is not None:
+        groups = jnp.asarray(timing.n_refresh_groups, jnp.int32)
+        busy = busy & (jnp.mod(row, groups) == jnp.mod(t // tREFI, groups))
     return jnp.where(busy, t + (jnp.asarray(timing.tRFC, jnp.int32) - r), t)
+
+
+def refresh_clamp_span(timing, t, span, row=None):
+    """Earliest start >= ``t`` such that ``[start, start + span)`` avoids
+    the refresh blackout — the burst-window form of ``refresh_adjust``
+    (an RD/WR command plus its data burst must not overlap
+    ``[k·tREFI, k·tREFI + tRFC)``).  Requires ``span <= tREFI - tRFC``
+    so one push always clears the window.  With ``row`` given, only the
+    window whose refresh group matches the row stalls the burst.
+    """
+    tREFI = jnp.asarray(timing.tREFI, jnp.int32)
+    tRFC = jnp.asarray(timing.tRFC, jnp.int32)
+    r = jnp.mod(t, tREFI)
+    base = t - r
+    in_this = r < tRFC                 # start inside window k's blackout
+    into_next = r + span > tREFI       # burst straddles window k+1's
+    if row is not None:
+        groups = jnp.asarray(timing.n_refresh_groups, jnp.int32)
+        k = t // tREFI
+        g = jnp.mod(row, groups)
+        in_this = in_this & (g == jnp.mod(k, groups))
+        into_next = into_next & (g == jnp.mod(k + 1, groups))
+    fixed = jnp.where(in_this, base + tRFC, base + tREFI + tRFC)
+    return jnp.where(in_this | into_next, fixed, t)

@@ -71,6 +71,13 @@ def energy_nj(stats: dict, timing: TimingParams = DDR3_1600,
     e_wr = (p.idd4w - p.idd3n) * p.vdd * float(stats["writes"]) * timing.tBL * cyc_s
 
     total_cycles = float(stats["total_cycles"])
+    # Refresh count: the wall-clock schedule rate.  The controller
+    # refreshes every tREFI whether or not a request observes it, so
+    # energy is charged per rank as total_cycles / tREFI — NOT the
+    # stateful engine's ``refs_issued``, which counts REFs observed at
+    # request arrival and undercounts trailing idle windows (DESIGN.md
+    # §14 caveats); under ``with_refresh_pressure`` the shrunken tREFI
+    # raises this term the way DDR4 2x/4x refresh raises IDD5 energy.
     n_ref = total_cycles / timing.tREFI
     e_ref = (p.idd5 - p.idd3n) * p.vdd * n_ref * timing.tRFC * cyc_s
 

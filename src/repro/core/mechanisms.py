@@ -34,6 +34,7 @@ import dataclasses
 from typing import NamedTuple, Sequence
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import aldram as aldram_lib
 from repro.core import charge_model
@@ -52,6 +53,7 @@ _KNOB_CANONICAL = {
     "lowered": lambda _: DDR3_1600.with_reduction(4, 8),
     "nuat_bins": lambda _: (),
     "aldram": lambda _: aldram_lib.ALDRAMConfig(),
+    "thermal": lambda _: aldram_lib.ThermalConfig(),
 }
 
 
@@ -73,6 +75,10 @@ class SelectCtx(NamedTuple):
                             # folded into the active geometry (< the
                             # traced banks_total — per-bank tables padded
                             # to the envelope are safe to index with it)
+    seg: jnp.ndarray = 0    # thermal-drift segment index at t_act, already
+                            # clipped to the grid's padded segment count
+                            # (0 when the grid has no drift schedules —
+                            # defaulted, so drift-free callers omit it)
 
 
 class MechanismPolicy:
@@ -105,7 +111,8 @@ class MechanismPolicy:
     #: means "itself if block-bearing, else nothing".
     components: tuple[str, ...] | None = None
     uses_hcrac: bool = False
-    consumes: tuple[str, ...] = ("hcrac", "lowered", "nuat_bins", "aldram")
+    consumes: tuple[str, ...] = ("hcrac", "lowered", "nuat_bins", "aldram",
+                                 "thermal")
 
     name: str = ""        # set by register_mechanism
     has_block: bool = False  # set by register_mechanism (structure probe)
@@ -291,8 +298,12 @@ class ChargeCache(_LoweredPolicy):
 
 @register_mechanism("nuat")
 class NUAT(MechanismPolicy):
-    """Closed-form time-since-refresh bins → per-ACT timing minimum."""
-    consumes = ("nuat_bins",)
+    """Closed-form time-since-refresh bins → per-ACT timing minimum.
+
+    Consumes ``thermal`` because its bin lookup reads the drift-scaled
+    leak clock (``ctx.tsr`` ages faster in hot segments, DESIGN.md §14).
+    """
+    consumes = ("nuat_bins", "thermal")
 
     def pad_hints(self, mechs):
         return {"n_bins": max((len(m.nuat_bins) for m in mechs), default=0)}
@@ -385,13 +396,20 @@ class ALDRAM(MechanismPolicy):
     temperature the table clips to the spec and the policy is a bitwise
     no-op (the guardband the spec already pays).
     """
-    consumes = ("aldram",)
+    consumes = ("aldram", "thermal")
+
+    def pad_hints(self, mechs):
+        # the grid-wide thermal segment count: every point's drift tables
+        # (and the ThermalParams leaves mech_params builds) share one [S]
+        return {"n_segs": max((m.thermal.n_segs for m in mechs), default=0)}
 
     def block(self, mech, timing, enabled, hints):
+        S = hints.get("n_segs", 0)
         if mech is None:  # structure probe: a spec-valued (inert) table
             nb = hints.get("n_banks_padded", 16)
-            rcd = [timing.tRCD] * nb
-            ras = [timing.tRAS] * nb
+            rcd = np.full(nb, timing.tRCD, np.int64)
+            ras = np.full(nb, timing.tRAS, np.int64)
+            temps = ()
         else:
             # fail loudly rather than fall back: an undersized table
             # would be indexed with JAX's clamping gather and silently
@@ -402,14 +420,34 @@ class ALDRAM(MechanismPolicy):
                 "'n_banks_padded' hint")
             nb = hints["n_banks_padded"]
             rcd, ras = aldram_lib.per_bank_timings(mech.aldram, timing, nb)
+            temps = mech.thermal.temps()
+        # per-segment drift tables, padded to the grid-wide S by
+        # repeating the static table (position-stable; padded segments
+        # are never selected — their seg_edge is past the horizon)
+        seg_rcd = np.tile(np.asarray(rcd)[None, :], (max(S, 1), 1))[:S]
+        seg_ras = np.tile(np.asarray(ras)[None, :], (max(S, 1), 1))[:S]
+        for i, tc in enumerate(temps):
+            r_i, s_i = aldram_lib.per_bank_timings(
+                dataclasses.replace(mech.aldram, temperature_c=tc),
+                timing, nb)
+            seg_rcd[i], seg_ras[i] = r_i, s_i
         return {"enable": jnp.bool_(enabled),
+                "drift": jnp.bool_(enabled and len(temps) > 0),
                 "rcd": jnp.asarray(rcd, jnp.int32),
-                "ras": jnp.asarray(ras, jnp.int32)}
+                "ras": jnp.asarray(ras, jnp.int32),
+                "seg_rcd": jnp.asarray(seg_rcd, jnp.int32),
+                "seg_ras": jnp.asarray(seg_ras, jnp.int32)}
 
     def select(self, block, ctx, rcd, ras):
         on = block["enable"]
-        rcd = jnp.where(on, jnp.minimum(rcd, block["rcd"][ctx.bank]), rcd)
-        ras = jnp.where(on, jnp.minimum(ras, block["ras"][ctx.bank]), ras)
+        b_rcd = block["rcd"][ctx.bank]
+        b_ras = block["ras"][ctx.bank]
+        if block["seg_rcd"].shape[-2] > 0:  # static gate: grid has drift
+            d = on & block["drift"]
+            b_rcd = jnp.where(d, block["seg_rcd"][ctx.seg, ctx.bank], b_rcd)
+            b_ras = jnp.where(d, block["seg_ras"][ctx.seg, ctx.bank], b_ras)
+        rcd = jnp.where(on, jnp.minimum(rcd, b_rcd), rcd)
+        ras = jnp.where(on, jnp.minimum(ras, b_ras), ras)
         return rcd, ras
 
 

@@ -163,6 +163,15 @@ def _rmpkc(acts, total_cycles):
     return 1000.0 * acts / np.maximum(total_cycles, 1)
 
 
+@register_metric("ref_blocked_frac",
+                 deps=("ref_blocked_cycles", "total_cycles"), best="min")
+def _ref_blocked_frac(ref_blocked_cycles, total_cycles):
+    """Fraction of the run a request sat behind a tRFC blackout — the
+    stateful refresh engine's headline cost stat (DESIGN.md §14; zero
+    under the legacy closed-form tier, which never issues REF)."""
+    return ref_blocked_cycles / np.maximum(total_cycles, 1)
+
+
 # --- serving-loop derived scalars (deps present only in serving mode) ---
 
 @register_metric("admit_hot_rate", deps=("admit_hot", "admit_probes"),

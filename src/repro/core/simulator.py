@@ -62,7 +62,7 @@ from repro.core.dram import (DRAMConfig, DDR3_SYSTEM, DRAMEnvelope,
 from repro.core import timing as timing_lib
 from repro.core.timing import (TimingParams, TimingVec, DDR3_1600,
                                ms_to_cycles)
-from repro.core.traces import TraceBatch, WorkloadSpec
+from repro.core.traces import TraceBatch, WorkloadSpec, WORKLOAD_BY_NAME
 from repro.core import mechanisms as registry
 from repro.core import metrics as metrics_lib
 from repro.core.mechanisms import default_nuat_bins  # noqa: F401 (re-export)
@@ -88,6 +88,11 @@ class MechanismConfig:
     #: AL-DRAM module profile (temperature / process bin) — consumed by
     #: the ``aldram`` policy's per-bank timing table (DESIGN.md §9)
     aldram: aldram_lib.ALDRAMConfig = aldram_lib.ALDRAMConfig()
+    #: piecewise-constant temperature drift along the stream (DESIGN.md
+    #: §14): scales the leak clock NUAT bins read and re-derives the
+    #: AL-DRAM per-bank tables per segment.  Empty = no drift (bitwise
+    #: identical to the pre-drift engine).
+    thermal: aldram_lib.ThermalConfig = aldram_lib.ThermalConfig()
 
     def __post_init__(self):
         assert self.kind in registry.names(), (
@@ -126,9 +131,17 @@ class SimConfig:
     #: ``sweep_serving``, DESIGN.md §12); ``None`` means trace- or
     #: workload-driven as above
     serving: object | None = None
+    #: refresh tier (DESIGN.md §14): "stateful" (default) issues REF
+    #: commands from per-bank counters in the scan carry — the bank
+    #: blocks for tRFC and the leak clock keys off the *actual* last
+    #: REF; "legacy" keeps the closed-form ``refresh_adjust`` blackout
+    #: (group-gated) as an opt-in parity tier.  A traced leaf, so mixed
+    #: refresh × mechanism grids share one compile.
+    refresh_mode: str = "stateful"
 
     def __post_init__(self):
         assert self.policy in ("open", "closed")
+        assert self.refresh_mode in ("legacy", "stateful"), self.refresh_mode
         assert self.backend in ("ref", "pallas"), self.backend
         if self.serving is not None:
             assert self.backend == "ref", (
@@ -162,6 +175,8 @@ class MechParams(NamedTuple):
     closed_policy: jnp.ndarray   # bool: closed-row policy (auto-precharge)
     hcrac: hcrac_lib.HCRACParams
     mech: dict                   # registry blocks: {policy: {leaf: array}}
+    refresh_stateful: jnp.ndarray  # bool: stateful REF tier (DESIGN.md §14)
+    thermal: aldram_lib.ThermalParams  # temperature drift along the stream
 
 
 def sim_shape(cfg: SimConfig, n_sets_max: int | None = None,
@@ -197,12 +212,22 @@ def mech_params(cfg: SimConfig, hints: dict | None = None,
     hints = hints if hints is not None else registry.pad_hints([cfg.mech])
     hints = {n: {**h, "n_banks_padded": env.max_banks_total}
              for n, h in hints.items()}
+    # grid-wide thermal segment count (the aldram policy's pad hint); a
+    # no-drift grid has S == 0 and every drift branch is statically gone
+    n_segs = hints.get("aldram", {}).get("n_segs", cfg.mech.thermal.n_segs)
+    th_en, th_edge, th_leak = aldram_lib.thermal_params_np(
+        cfg.mech.thermal, n_segs)
     return MechParams(
         timing=timing_lib.traced(cfg.timing),
         geom=geom_params(cfg.dram),
         closed_policy=jnp.bool_(cfg.policy == "closed"),
         hcrac=hcrac_lib.params_of(cfg.mech.hcrac),
         mech=registry.build_blocks(cfg.mech, cfg.timing, hints),
+        refresh_stateful=jnp.bool_(cfg.refresh_mode == "stateful"),
+        thermal=aldram_lib.ThermalParams(
+            enable=jnp.asarray(th_en),
+            seg_edge=jnp.asarray(th_edge),
+            seg_leak=jnp.asarray(th_leak)),
     )
 
 
@@ -222,6 +247,9 @@ class SimState(NamedTuple):
     ready_pre: jnp.ndarray     # [NB]
     last_pre_gid: jnp.ndarray  # [NB] row id of the bank's latest PRE
     last_pre_t: jnp.ndarray    # [NB] cycle of that PRE (RLTL registers)
+    ref_k: jnp.ndarray         # [NB] REF windows issued so far (stateful
+                               # refresh tier, DESIGN.md §14)
+    last_ref_t: jnp.ndarray    # [NB] issue cycle of the bank's latest REF
     # per-channel buses
     cmd_bus_free: jnp.ndarray  # [NCH]
     data_bus_free: jnp.ndarray  # [NCH]
@@ -233,7 +261,8 @@ class SimState(NamedTuple):
 
 STAT_KEYS = ("n_req", "lat_sum", "acts", "acts_lowered", "hcrac_hits",
              "hcrac_lookups", "row_hits", "row_closed", "row_conflicts",
-             "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts")
+             "reads", "writes", "pres", "act_ras_sum", "refresh8ms_acts",
+             "refs_issued", "ref_blocked_cycles")
 
 #: [NB]-shaped stat accumulators (sized to the padded envelope, scattered
 #: at the folded bank index, so entries past the active ``banks_total``
@@ -303,6 +332,7 @@ def _init_state(shape: SimShape, n_cores: int, max_len: int) -> SimState:
         open_row=jnp.full((nb,), NO_ROW, jnp.int32),
         ready_act=z(nb), ready_rdwr=z(nb), ready_pre=z(nb),
         last_pre_gid=jnp.full((nb,), -1, jnp.int32), last_pre_t=z(nb),
+        ref_k=z(nb), last_ref_t=z(nb),
         cmd_bus_free=z(nch), data_bus_free=z(nch),
         hcrac=hcrac_lib.init(shape.hcrac),
         stats=stats,
@@ -328,28 +358,62 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
     stats = dict(st.stats)
 
     t0 = jnp.maximum(t_arr, st.cmd_bus_free[ch])
-    openr = st.open_row[bank]
-    is_hit = openr == row
-    is_closed = openr == NO_ROW
-    is_conflict = ~is_hit & ~is_closed
 
     # HCRAC substrate gate: any registered policy that declared
     # ``uses_hcrac`` and is enabled at this grid point (traced data).
     hc_gate = registry.hcrac_gate(p.mech)
 
+    # --- rolling refresh (DESIGN.md §14) ---------------------------------
+    # Two tiers selected by the traced ``refresh_stateful`` leaf.  The
+    # stateful tier catches the bank's per-bank REF counter up to the
+    # schedule (window k's REF issues at k*tREFI and refreshes group
+    # k mod n_refresh_groups): only the newest pending REF can still
+    # block — earlier ones completed during the bank's idle windows — so
+    # the catch-up is O(1) per step.  A REF implies a precharge (folded
+    # into tRFC), which closes the open row, restores its charge (HCRAC
+    # insert, like any PRE) and advances every bank-ready clock to the
+    # end of the tRFC blackout.
+    stateful = p.refresh_stateful
+    legacy = ~stateful
+    ref_due = t0 // T.tREFI + 1           # REFs scheduled at or before t0
+    n_pend = jnp.maximum(ref_due - st.ref_k[bank], 0)
+    do_ref = stateful & (n_pend > 0) & enable
+    busy0 = jnp.maximum(jnp.maximum(st.ready_act[bank], st.ready_pre[bank]),
+                        st.ready_rdwr[bank])
+    ref_t = jnp.maximum((ref_due - 1) * T.tREFI, st.ready_pre[bank])
+    ref_done = ref_t + T.tRFC
+    openr0 = st.open_row[bank]
+    ref_pre = do_ref & (openr0 != NO_ROW)
+    openr = jnp.where(do_ref, NO_ROW, openr0)
+    clamp = lambda rdy: jnp.where(do_ref, jnp.maximum(rdy, ref_done), rdy)
+    r_act_b = clamp(st.ready_act[bank])
+    r_pre_b = clamp(st.ready_pre[bank])
+    r_rdwr_b = clamp(st.ready_rdwr[bank])
+    gid_ref = dram_lib.global_row_id(geom, bank,
+                                     jnp.where(ref_pre, openr0, 0))
+    hc0 = hcrac_lib.insert(hshape, st.hcrac, gid_ref, ref_t,
+                           enable=ref_pre & hc_gate, params=p.hcrac)
+    # legacy tier: the closed-form blackout, gated to the request row's
+    # refresh group (matching dram.py's rolling schedule — satellite 2)
+    radj = lambda tt: jnp.where(legacy, refresh_adjust(T, tt, row), tt)
+
+    is_hit = openr == row
+    is_closed = openr == NO_ROW
+    is_conflict = ~is_hit & ~is_closed
+
     # --- conflict path: PRE the open row (insert it into the HCRAC) ------
-    t_pre = refresh_adjust(T, jnp.maximum(t0, st.ready_pre[bank]))
+    t_pre = radj(jnp.maximum(t0, r_pre_b))
     gid_old = dram_lib.global_row_id(geom, bank,
                                      jnp.where(is_conflict, openr, 0))
-    hc = hcrac_lib.insert(hshape, st.hcrac, gid_old, t_pre,
+    hc = hcrac_lib.insert(hshape, hc0, gid_old, t_pre,
                           enable=is_conflict & hc_gate & enable,
                           params=p.hcrac)
 
     # --- ACT ---------------------------------------------------------------
     t_act = jnp.where(
         is_conflict,
-        refresh_adjust(T, t_pre + T.tRP),
-        refresh_adjust(T, jnp.maximum(t0, st.ready_act[bank])))
+        radj(t_pre + T.tRP),
+        radj(jnp.maximum(t0, r_act_b)))
     needs_act = ~is_hit
 
     gid = dram_lib.global_row_id(geom, bank, row)
@@ -368,26 +432,63 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
     # ChargeCache hit override, then NUAT minimum — DESIGN.md §7.2).
     # Selection stays data-driven: each policy gates on its own traced
     # ``enable`` leaf, so one compiled body serves every registered kind.
-    tsr = time_since_refresh(geom, T, row, t_act)
-    ctx = registry.SelectCtx(timing=T, geom=geom, hcrac_hit=cc_hit, tsr=tsr,
-                             tslp=tslp, needs_act=needs_act, bank=bank)
+    # leak clock: the legacy tier uses the closed-form schedule phase;
+    # the stateful tier keys off the *actual* last REF of the row's
+    # group.  Post-catch-up the bank's newest REF index is kw; the
+    # newest window that refreshed group g is j_g (≡ g mod groups).  If
+    # that is the bank's own newest REF its true (possibly delayed)
+    # issue cycle is the carry's register; older windows' REFs completed
+    # on schedule at j_g*tREFI.  Windows before the stream start fall
+    # back to the closed form (the pre-history schedule).
+    tsr_closed = time_since_refresh(geom, T, row, t_act)
+    kw = ref_due - 1
+    j_g = kw - jnp.mod(kw - jnp.mod(row, T.n_refresh_groups),
+                       T.n_refresh_groups)
+    new_last_ref_t = jnp.where(do_ref, ref_t, st.last_ref_t[bank])
+    t_ref = jnp.where(j_g == kw, new_last_ref_t, j_g * T.tREFI)
+    tsr = jnp.where(stateful & (j_g >= 0),
+                    jnp.maximum(t_act - t_ref, 0), tsr_closed)
+    # thermal drift (DESIGN.md §14): in hot segments the leak clock runs
+    # fast — NUAT sees an *effective* age scaled by the leak-rate
+    # multiplier.  S == 0 (no drift anywhere in the grid) skips this
+    # statically, keeping the no-drift engine bitwise intact.
+    if p.thermal.seg_edge.shape[-1] > 0:
+        seg = jnp.sum((t_act >= p.thermal.seg_edge).astype(jnp.int32)) - 1
+        seg = jnp.clip(seg, 0, p.thermal.seg_edge.shape[-1] - 1)
+        tsr_eff = jnp.where(
+            p.thermal.enable,
+            jnp.round(tsr.astype(jnp.float32)
+                      * p.thermal.seg_leak[seg]).astype(jnp.int32),
+            tsr)
+    else:
+        seg = jnp.int32(0)
+        tsr_eff = tsr
+    ctx = registry.SelectCtx(timing=T, geom=geom, hcrac_hit=cc_hit,
+                             tsr=tsr_eff, tslp=tslp, needs_act=needs_act,
+                             bank=bank, seg=seg)
     rcd, ras = registry.select_timings(p.mech, ctx)
     lowered_used = needs_act & ((rcd < T.tRCD) | (ras < T.tRAS))
 
     # --- READ / WRITE -------------------------------------------------------
     t_rdwr_act = t_act + rcd
-    t_rdwr_hit = jnp.maximum(t0, st.ready_rdwr[bank])
+    t_rdwr_hit = jnp.maximum(t0, r_rdwr_b)
     t_rdwr = jnp.where(is_hit, t_rdwr_hit, t_rdwr_act)
     cas = jnp.where(is_write, T.tCWL, T.tCL)
     # data bus occupancy: burst occupies [t_rdwr + cas, + tBL)
     t_rdwr = jnp.maximum(t_rdwr, st.data_bus_free[ch] - cas)
+    # legacy tier: the RD/WR command *and* its burst must clear the
+    # blackout window too, like PRE/ACT above (satellite 1 — the burst
+    # used to be issued straight through the tRFC blackout)
+    t_rdwr = jnp.where(
+        legacy, dram_lib.refresh_clamp_span(T, t_rdwr, cas + T.tBL, row),
+        t_rdwr)
     done = t_rdwr + cas + T.tBL
 
     # --- bank state updates -------------------------------------------------
-    new_ready_rdwr = jnp.where(needs_act, t_act + rcd, st.ready_rdwr[bank])
+    new_ready_rdwr = jnp.where(needs_act, t_act + rcd, r_rdwr_b)
     after_rw = jnp.where(is_write, done + T.tWR, t_rdwr + T.tRTP)
     new_ready_pre = jnp.maximum(
-        jnp.where(needs_act, t_act + ras, st.ready_pre[bank]), after_rw)
+        jnp.where(needs_act, t_act + ras, r_pre_b), after_rw)
 
     # closed-row policy: auto-precharge unless the next queued request from
     # this core hits the same row (queue-hit lookahead).
@@ -399,20 +500,21 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
     new_open = jnp.where(auto_pre, NO_ROW, row)
     new_ready_act = jnp.where(
         auto_pre, t_autopre + T.tRP,
-        jnp.where(is_conflict, t_pre + T.tRP, st.ready_act[bank]))
+        jnp.where(is_conflict, t_pre + T.tRP, r_act_b))
 
     n_cmds = (1 + needs_act.astype(jnp.int32) + is_conflict.astype(jnp.int32)
               + auto_pre.astype(jnp.int32))
     new_cmd_free = jnp.maximum(st.cmd_bus_free[ch], t_arr) + n_cmds
     new_data_free = done
 
-    # last-PRE registers: the auto-PRE (if any) postdates the conflict-PRE
+    # last-PRE registers: the auto-PRE (if any) postdates the conflict-PRE,
+    # which postdates the REF's implied precharge
+    lp_gid0 = jnp.where(ref_pre, gid_ref, st.last_pre_gid[bank])
+    lp_t0 = jnp.where(ref_pre, ref_t, st.last_pre_t[bank])
     new_lp_gid = jnp.where(auto_pre, gid,
-                           jnp.where(is_conflict, gid_old,
-                                     st.last_pre_gid[bank]))
+                           jnp.where(is_conflict, gid_old, lp_gid0))
     new_lp_t = jnp.where(auto_pre, t_autopre,
-                         jnp.where(is_conflict, t_pre,
-                                   st.last_pre_t[bank]))
+                         jnp.where(is_conflict, t_pre, lp_t0))
 
     # --- stats ---------------------------------------------------------------
     m = measure.astype(jnp.int32)
@@ -432,6 +534,13 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
     _acc(stats, "act_ras_sum", m * needs_act * ras)
     ref8 = needs_act & measure & (tsr < ms_to_cycles(8.0))
     _acc(stats, "refresh8ms_acts", ref8)
+    # stateful-tier refresh stats: REFs observed at command arrivals, and
+    # the blackout cycles a REF imposed beyond the bank's prior business
+    # (legacy-tier blocking shows up in latency, not here — DESIGN.md §14)
+    _acc(stats, "refs_issued", m * stateful.astype(jnp.int32) * n_pend)
+    _acc(stats, "ref_blocked_cycles",
+         jnp.where(do_ref & measure,
+                   jnp.maximum(ref_done - jnp.maximum(t0, busy0), 0), 0))
     # per-bank scatter-adds: a masked (m=0) or padded step adds zero, and
     # ``bank`` is always < the active banks_total, so envelope-padded
     # entries stay exactly zero (the §8/§9 masking invariant, tested)
@@ -467,6 +576,10 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
             w(new_lp_gid, st.last_pre_gid[bank])),
         last_pre_t=st.last_pre_t.at[bank].set(
             w(new_lp_t, st.last_pre_t[bank])),
+        # do_ref already folds ``enable`` (and the stateful gate) in
+        ref_k=st.ref_k.at[bank].set(
+            jnp.where(do_ref, ref_due, st.ref_k[bank])),
+        last_ref_t=st.last_ref_t.at[bank].set(new_last_ref_t),
         cmd_bus_free=st.cmd_bus_free.at[ch].set(
             w(new_cmd_free, st.cmd_bus_free[ch])),
         data_bus_free=st.data_bus_free.at[ch].set(
@@ -860,6 +973,13 @@ def _finalize(raw_stats: dict, core_end, rltl: tuple,
     stats["rltl_total"] = None if rltl_total is None else int(rltl_total)
     stats["core_end"] = np.asarray(core_end)
     stats["total_cycles"] = int(stats["core_end"].max())
+    # int32 cycle-horizon backstop (satellite 4): a stream whose clock
+    # wrapped past INF (the dead-step sentinel) silently corrupts every
+    # time-derived stat — fail loudly with the split-the-stream remedy
+    assert 0 <= stats["total_cycles"] < int(INF), (
+        f"cycle clock overflowed the int32 horizon "
+        f"(total_cycles={stats['total_cycles']}, limit={int(INF)}); "
+        f"split the stream into shorter chunks or reduce mean_gap")
     stats["n_cores"] = int(np.asarray(lengths).shape[0])
     stats["lengths"] = np.asarray(lengths)
     if cfg is not None:
@@ -886,6 +1006,13 @@ def simulate(batch: TraceBatch, cfg: SimConfig = SimConfig()) -> dict:
     n_steps = int(batch.length.sum())
     # horizon guard: int32 cycle arithmetic
     assert n_steps < 2**24, "trace too long for the int32 cycle horizon"
+    # a-priori overflow guard (satellite 4): the arrival clock alone —
+    # the per-core gap sum — must stay below the int32 sentinel before
+    # any service time is added (``_finalize`` backstops the total)
+    arrival = int(np.asarray(batch.gap, np.int64).sum(axis=1).max())
+    assert arrival < int(INF), (
+        f"trace arrival clock ({arrival} cycles) overflows the int32 "
+        f"horizon ({int(INF)}); split the stream into shorter chunks")
     warmup = jnp.int32(int(cfg.warmup_frac * n_steps))
     raw_stats, core_end, events = _run(sim_shape(cfg), mech_params(cfg),
                                        trace, warmup, n_steps)
@@ -936,18 +1063,20 @@ def _freeze_hints(hints: dict) -> tuple:
 
 @functools.lru_cache(maxsize=16384)
 def _point_params_np(timing: TimingParams, dram: DRAMConfig, policy: str,
-                     mech: MechanismConfig, hints_key: tuple,
-                     env: DRAMEnvelope):
+                     mech: MechanismConfig, refresh_mode: str,
+                     hints_key: tuple, env: DRAMEnvelope):
     """One grid point's ``mech_params`` pytree as flat *numpy* leaves.
 
-    ``mech_params`` only reads (timing, dram, policy, mech), so points
-    differing elsewhere (a workload-seed axis, serving knobs, ...) share
-    one cache entry — and a 10⁵-point grid stages from a handful of
-    distinct entries by fancy-indexing numpy columns instead of building
-    10⁵ × ~80 device scalars (``_grid_shape_and_params``).  The hints
-    key covers the registered-policy set, so a temporarily registered
-    mechanism (tests' ``registry.temporary``) never aliases an entry."""
-    cfg = SimConfig(dram=dram, timing=timing, mech=mech, policy=policy)
+    ``mech_params`` only reads (timing, dram, policy, mech,
+    refresh_mode), so points differing elsewhere (a workload-seed axis,
+    serving knobs, ...) share one cache entry — and a 10⁵-point grid
+    stages from a handful of distinct entries by fancy-indexing numpy
+    columns instead of building 10⁵ × ~80 device scalars
+    (``_grid_shape_and_params``).  The hints key covers the
+    registered-policy set, so a temporarily registered mechanism
+    (tests' ``registry.temporary``) never aliases an entry."""
+    cfg = SimConfig(dram=dram, timing=timing, mech=mech, policy=policy,
+                    refresh_mode=refresh_mode)
     hints = {n: dict(h) for n, h in hints_key}
     p = mech_params(cfg, hints=hints, envelope=env)
     leaves, treedef = jax.tree_util.tree_flatten(p)
@@ -1013,9 +1142,11 @@ def _grid_shape_and_params(grid: Sequence[SimConfig],
     hkey = _freeze_hints(hints)
     stacked = _stack_cached(
         grid,
-        point_key=lambda cfg: (cfg.timing, cfg.dram, cfg.policy, cfg.mech),
+        point_key=lambda cfg: (cfg.timing, cfg.dram, cfg.policy, cfg.mech,
+                               cfg.refresh_mode),
         point_leaves=lambda cfg: _point_params_np(
-            cfg.timing, cfg.dram, cfg.policy, cfg.mech, hkey, env))
+            cfg.timing, cfg.dram, cfg.policy, cfg.mech, cfg.refresh_mode,
+            hkey, env))
     return shape, stacked
 
 
@@ -1244,15 +1375,37 @@ def _run_synth_batched(shape: SimShape, n_cores: int, max_len: int,
 
 
 @functools.lru_cache(maxsize=4096)
-def _wparams_np(names: tuple, n_req: int):
+def _wparams_np(names: tuple, n_req: int, phases: tuple, n_segs: int):
     """One spec's traced ``WorkloadParams`` as flat numpy leaves, cached
-    by the (names, n_req) pair that determines every leaf *except* the
-    stream seed (staged as seed=0; the caller overwrites the seed column
-    from the configs) — a 10⁵-point seed axis stages from ONE entry."""
+    by the (names, n_req, phases, n_segs) tuple that determines every
+    leaf *except* the stream seed (staged as seed=0; the caller
+    overwrites the seed column from the configs) — a 10⁵-point seed axis
+    stages from ONE entry.  ``n_segs`` is the grid-wide phase-segment
+    count the spec pads to (profiles.n_segs_of)."""
     from repro.workloads.profiles import spec_params
-    p = spec_params(WorkloadSpec(names=names, n_req=n_req, seed=0))
+    p = spec_params(WorkloadSpec(names=names, n_req=n_req, seed=0,
+                                 phases=phases), n_segs=n_segs)
     leaves, treedef = jax.tree_util.tree_flatten(p)
     return tuple(np.asarray(x) for x in leaves), treedef
+
+
+@functools.lru_cache(maxsize=4096)
+def _check_synth_horizon(names: tuple, n_req: int, phases: tuple):
+    """A-priori int32 overflow guard for synthetic streams (satellite
+    4): the expected arrival clock per core — ``length * mean_gap``,
+    maximized over the phase schedule — must sit well below the int32
+    sentinel (4x expectation covers the geometric gap tail; the
+    ``_finalize`` runtime assert backstops the actual clock)."""
+    spec = WorkloadSpec(names=names, n_req=n_req, phases=phases)
+    lengths = spec.lengths()
+    for c, n in enumerate(names):
+        gaps = [WORKLOAD_BY_NAME[n].mean_gap] + [
+            WORKLOAD_BY_NAME[nm[c]].mean_gap for _, nm in phases]
+        worst = 4.0 * float(lengths[c]) * max(max(gaps), 1.0)
+        assert worst < float(INF), (
+            f"core {c} ({n!r}, n_req={n_req}) risks int32 cycle "
+            f"overflow (~{worst:.3g} expected arrival cycles vs the "
+            f"{int(INF)} horizon); split the stream into shorter chunks")
 
 
 @functools.lru_cache(maxsize=512)
@@ -1272,7 +1425,7 @@ def _stage_synth(grid: Sequence[SimConfig],
     params (``MechParams`` / ``WorkloadParams`` / ``InterleaveParams`` /
     warmups).  The §13 runner stages the full unique grid ONCE and
     slices numpy views per chunk."""
-    from repro.workloads.profiles import max_len_of
+    from repro.workloads.profiles import max_len_of, n_segs_of
     grid = list(grid)
     assert grid, "empty synthetic sweep grid"
     shape_grid_l = (list(shape_grid) if shape_grid is not None
@@ -1290,11 +1443,17 @@ def _stage_synth(grid: Sequence[SimConfig],
     n_steps = n_cores * max_len
     assert n_steps < 2**24, "workload too long for the int32 cycle horizon"
 
+    n_segs = n_segs_of([cfg.workload for cfg in grid + shape_grid_l])
+    for cfg in grid:
+        _check_synth_horizon(cfg.workload.names, cfg.workload.n_req,
+                             cfg.workload.phases)
     wstack = _stack_cached(
         grid,
-        point_key=lambda cfg: (cfg.workload.names, cfg.workload.n_req),
+        point_key=lambda cfg: (cfg.workload.names, cfg.workload.n_req,
+                               cfg.workload.phases, n_segs),
         point_leaves=lambda cfg: _wparams_np(cfg.workload.names,
-                                             cfg.workload.n_req))
+                                             cfg.workload.n_req,
+                                             cfg.workload.phases, n_segs))
     seeds = np.asarray([cfg.workload.seed for cfg in grid], np.int32)
     wstack = wstack._replace(
         seed=np.ascontiguousarray(

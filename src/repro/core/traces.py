@@ -145,6 +145,12 @@ class WorkloadSpec:
     names: tuple[str, ...] = ()
     n_req: int = 20_000
     seed: int = 0
+    #: phase-changing profiles along the stream (DESIGN.md §14): extra
+    #: ``(start_frac, names)`` segments after the base ``names`` phase —
+    #: at request index ``int(start_frac * length)`` each core switches
+    #: to the segment's profile.  Sizing (``lengths``) stays keyed to
+    #: the base phase; empty = stationary (bitwise-identical streams).
+    phases: tuple = ()
 
     def __post_init__(self):
         object.__setattr__(self, "names", tuple(self.names))
@@ -152,6 +158,18 @@ class WorkloadSpec:
             assert n in WORKLOAD_BY_NAME, (
                 f"unknown workload profile {n!r}")
         assert self.n_req >= 8
+        ph = tuple((float(fr), tuple(nm)) for fr, nm in self.phases)
+        object.__setattr__(self, "phases", ph)
+        last = 0.0
+        for fr, nm in ph:
+            assert 0.0 < fr < 1.0 and fr >= last, (
+                "phase start fractions must be increasing in (0, 1)")
+            last = fr
+            assert len(nm) == len(self.names), (
+                "each phase needs one profile per core")
+            for n in nm:
+                assert n in WORKLOAD_BY_NAME, (
+                    f"unknown workload profile {n!r}")
 
     @property
     def n_cores(self) -> int:

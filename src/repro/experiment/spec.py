@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Any, Callable, Mapping, Sequence
 
+from repro.core.aldram import ThermalConfig
 from repro.core.dram import DRAMConfig, InterleaveConfig
 from repro.core.simulator import SimConfig
 from repro.core.timing import lowered_for_duration, ms_to_cycles
@@ -106,6 +107,47 @@ def _axis_temperature(cfg: SimConfig, temp_c) -> SimConfig:
     ald = dataclasses.replace(cfg.mech.aldram, temperature_c=float(temp_c))
     return dataclasses.replace(
         cfg, mech=dataclasses.replace(cfg.mech, aldram=ald))
+
+
+#: Named temperature schedules for the ``temp_drift`` axis.  Start
+#: times are milliseconds of *stream* time — short presets (tens of µs)
+#: so the drift is observable inside benchmark-sized streams; serving /
+#: mega-sweep studies pass their own ``ThermalConfig`` at real scales.
+THERMAL_PRESETS: dict[str, ThermalConfig] = {
+    "none": ThermalConfig(),
+    "cool": ThermalConfig(points=((0.0, 55.0),)),
+    "ramp": ThermalConfig(points=((0.0, 55.0), (0.02, 70.0),
+                                  (0.04, 85.0))),
+    "hot": ThermalConfig(points=((0.0, 85.0),)),
+}
+
+
+@register_axis("refresh_mode")
+def _axis_refresh_mode(cfg: SimConfig, mode: str) -> SimConfig:
+    """Refresh model tier (DESIGN.md §14): ``"stateful"`` (the
+    authoritative rolling-refresh carry — REF issued on the per-group
+    schedule, tRFC blackout on all three bank ready clocks, leak clock
+    keyed to the actual last REF) or ``"legacy"`` (the opt-in closed-form
+    ``refresh_adjust`` approximation).  A traced ``MechParams`` leaf, so
+    a refresh × mechanism grid rides one compilation."""
+    return dataclasses.replace(cfg, refresh_mode=mode)
+
+
+@register_axis("temp_drift")
+def _axis_temp_drift(cfg: SimConfig, value) -> SimConfig:
+    """Temperature drift along the stream: a ``THERMAL_PRESETS`` name or
+    a ``ThermalConfig``.  Per-segment leak multipliers scale the NUAT /
+    refresh8ms leak clock and re-derive the AL-DRAM per-bank tables per
+    segment (DESIGN.md §14); mechanisms that consume neither knob dedup
+    across this axis (``registry.canonical_mech``)."""
+    if isinstance(value, str):
+        assert value in THERMAL_PRESETS, (
+            f"unknown temp_drift preset {value!r}; "
+            f"known: {tuple(THERMAL_PRESETS)}")
+        value = THERMAL_PRESETS[value]
+    assert isinstance(value, ThermalConfig), value
+    return dataclasses.replace(
+        cfg, mech=dataclasses.replace(cfg.mech, thermal=value))
 
 
 @register_axis("workload")

@@ -107,12 +107,26 @@ def _rank_pick(u, u_tail, w: WorkloadParams):
 
 def _gen_core(max_len: int, w: WorkloadParams, geom: GeomParams,
               il: InterleaveParams):
-    """One core's stream: every WorkloadParams leaf a scalar array."""
+    """One core's stream: identity WorkloadParams leaves are scalar
+    arrays, distributional leaves carry the phase-segment axis [S]."""
     xp = jnp
     step = jnp.arange(max_len, dtype=jnp.int32)
     key = (w.seed, w.core_idx)
     u = lambda lane, *extra: prng.uniform(xp, *key, lane, *extra)
     h = lambda lane, *extra: prng.hash_u32(xp, *key, lane, *extra)
+
+    # active phase segment per step (DESIGN.md §14): distributional
+    # leaves are [S] and ``seg_edge[0] == 0``, so a stationary spec
+    # (S == 1) gathers segment 0 everywhere and the stream is bitwise
+    # the pre-phase stream; padded segments start at 2**30 (never hit)
+    seg = jnp.sum((step[:, None] >= w.seg_edge[None, :]),
+                  axis=1).astype(jnp.int32) - 1
+    g = lambda leaf: leaf[seg]          # [S] leaf -> per-step [L] view
+    wv = w._replace(
+        mean_gap=g(w.mean_gap), p_rowhit=g(w.p_rowhit), p_hot=g(w.p_hot),
+        p_seq=g(w.p_seq), p_dep=g(w.p_dep), p_write=g(w.p_write),
+        stack_zipf=g(w.stack_zipf), stack_geo=g(w.stack_geo),
+        hot_rows=g(w.hot_rows), n_hot_banks=g(w.n_hot_banks))
 
     # per-core row slice of the traced geometry (thesis §6.1 regions)
     span = jnp.maximum(geom.n_rows // jnp.maximum(w.n_cores, 1), 1)
@@ -123,38 +137,43 @@ def _gen_core(max_len: int, w: WorkloadParams, geom: GeomParams,
     stride = 1 + 2 * _umod(h(_L_STRIDE), jnp.maximum(geom.banks_total // 2,
                                                      1))
     hot_lb = lambda k: jnp.mod(b0 + k * stride, geom.banks_total)
-    nhb = jnp.maximum(w.n_hot_banks, 1)
+    nhb = jnp.maximum(wv.n_hot_banks, 1)          # per-step [L]
+    nhb0 = jnp.maximum(w.n_hot_banks[0], 1)       # phase-0 (init state)
 
     # virtual hot table: entry j -> a fixed (bank, row) pair, re-derived
-    # on demand (no stored table — the counter-based PRNG contract)
-    def hot_entry(j):
-        lb = hot_lb(_umod(h(_L_HOTBANK, j), nhb))
+    # on demand (no stored table — the counter-based PRNG contract);
+    # ``nhb_k`` is the active hot-bank count (the hot set concentrates
+    # into a different bank span when a phase changes it)
+    def hot_entry(j, nhb_k):
+        lb = hot_lb(_umod(h(_L_HOTBANK, j), nhb_k))
         row = base + _umod(h(_L_HOTROW, j), span)
         return lb, row
 
     # vectorized candidate draws for every step
-    j_pick = _rank_pick(u(_L_PICK, step), u(_L_PICK2, step), w)
-    lb_hot, row_hot = hot_entry(j_pick)
+    j_pick = _rank_pick(u(_L_PICK, step), u(_L_PICK2, step), wv)
+    lb_hot, row_hot = hot_entry(j_pick, nhb)
     lb_rand = hot_lb(_umod(h(_L_RBANK, step), nhb))
     row_rand = base + _umod(h(_L_RROW, step), span)
-    u_hit = u(_L_HIT, step)
-    u_seq = u(_L_SEQ, step)
-    u_hot = u(_L_HOT, step)
+    # branch draws, resolved against the per-step (phase-active)
+    # probabilities OUTSIDE the walk scan — the scan only sequences
+    hit_c = u(_L_HIT, step) < wv.p_rowhit
+    seq_c = u(_L_SEQ, step) < wv.p_seq
+    hot_c = u(_L_HOT, step) < wv.p_hot
 
     # intensity / mix (independent of the address walk)
-    p_gap = 1.0 / w.mean_gap
+    p_gap = 1.0 / wv.mean_gap
     gap = 1 + jnp.floor(jnp.log1p(-u(_L_GAP, step))
                         / jnp.log1p(-p_gap)).astype(jnp.int32)
     gap = jnp.clip(gap, 1, _MAX_GAP)
-    is_write = u(_L_WRITE, step) < w.p_write
-    dep = u(_L_DEP, step) < w.p_dep
+    is_write = u(_L_WRITE, step) < wv.p_write
+    dep = u(_L_DEP, step) < wv.p_dep
 
     def walk(carry, x):
         lb, row, ring_lb, ring_row, head = carry
         uh, us, uo, jp, lbh, rwh, lbr, rwr = x
-        hit = uh < w.p_rowhit
-        seq = ~hit & (us < w.p_seq)
-        hot = ~hit & ~seq & (uo < w.p_hot)
+        hit = uh
+        seq = ~hit & us
+        hot = ~hit & ~seq & uo
         row_seq = base + jnp.mod(row - base + 1, span)  # streaming advance
         # the move-to-front stack's shallow ranks are *recency*, not
         # popularity: rank 0 IS the current row (the last touched entry
@@ -180,11 +199,12 @@ def _gen_core(max_len: int, w: WorkloadParams, geom: GeomParams,
         return ((new_lb, new_row, nring_lb, nring_row, nh),
                 (new_lb, new_row))
 
-    lb0, row0 = hot_entry(jnp.int32(0))  # the reference's stack[0] start
-    ring0 = hot_entry(1 + jnp.arange(RECENT_RING, dtype=jnp.int32))
+    # init state draws from the phase-0 hot set (the stream starts there)
+    lb0, row0 = hot_entry(jnp.int32(0), nhb0)  # reference's stack[0] start
+    ring0 = hot_entry(1 + jnp.arange(RECENT_RING, dtype=jnp.int32), nhb0)
     _, (lb, row) = jax.lax.scan(
         walk, (lb0, row0, ring0[0], ring0[1], jnp.int32(0)),
-        (u_hit, u_seq, u_hot, j_pick, lb_hot, row_hot, lb_rand, row_rand))
+        (hit_c, seq_c, hot_c, j_pick, lb_hot, row_hot, lb_rand, row_rand))
 
     # physical bank via the interleave policy, then pad past `length`
     # with zeros so the stream is bitwise the padded TraceBatch layout

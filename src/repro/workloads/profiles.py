@@ -1,4 +1,4 @@
-"""Workload profiles as a traced pytree (DESIGN.md §10.1).
+"""Workload profiles as a traced pytree (DESIGN.md §10.1, §14).
 
 ``repro.core.traces`` owns the shared 22-profile table (host dataclasses,
 calibrated against the thesis's Section 3/6 aggregates); this module is
@@ -8,12 +8,24 @@ the *traced* view: every statistical knob of a profile becomes a leaf of
 compiles ONCE for every profile — the workload is data, exactly like
 timing, geometry, and mechanism before it.
 
-Leaves are per-core: a ``WorkloadSpec`` with C cores yields ``[C]``
-leaves; ``sweep_synth`` stacks specs into ``[grid, C]``.  The per-core
-row *slice* (multiprogrammed cores conflict on banks, not rows — thesis
-§6.1) is derived inside the generator from the traced geometry as
+Leaves are per-core: a ``WorkloadSpec`` with C cores yields ``[C, S]``
+distributional leaves (``S`` = phase-segment count, see below) plus
+``[C]`` identity leaves; ``sweep_synth`` stacks specs into
+``[grid, C, S]`` / ``[grid, C]``.  The per-core row *slice*
+(multiprogrammed cores conflict on banks, not rows — thesis §6.1) is
+derived inside the generator from the traced geometry as
 ``span = n_rows // n_cores`` / ``base = core_index * span``, matching
 ``traces.multicore_batch`` on the generating geometry.
+
+Phase-changing workloads (DESIGN.md §14): every *distributional* leaf
+(probabilities, gap, hot-set shape) carries a trailing segment axis
+``[S]`` plus a ``seg_edge [S]`` leaf of request-index boundaries; the
+generator gathers the active segment per step.  A stationary spec is
+``S == 1`` with ``seg_edge = [0]`` — the gather is an all-zeros index
+and the stream is bitwise the pre-phase stream.  Specs in one grid pad
+to the grid-wide ``S`` by repeating the last real segment with a
+never-reached edge (``2**30``), the same position-stable padding rule
+as AL-DRAM's thermal segments.
 """
 
 from __future__ import annotations
@@ -26,23 +38,31 @@ import numpy as np
 
 from repro.core.traces import WORKLOAD_BY_NAME, WorkloadProfile, WorkloadSpec
 
-__all__ = ["WorkloadParams", "profile_params", "spec_params", "max_len_of"]
+__all__ = ["WorkloadParams", "profile_params", "spec_params", "max_len_of",
+           "n_segs_of"]
+
+#: never-reached request index padding for ``seg_edge`` (streams are
+#: bounded far below this by the int32 cycle-horizon asserts)
+_EDGE_INF = np.int32(2**30)
 
 
 class WorkloadParams(NamedTuple):
     """Traced per-core workload statistics.  Every leaf is an array so
-    profiles are grid data; shapes are ``[]`` per core, ``[C]`` per
-    spec, ``[grid, C]`` across a sweep."""
-    mean_gap: jnp.ndarray     # f32: mean bus cycles between issues
-    p_rowhit: jnp.ndarray     # f32: row-buffer hit-run probability
-    p_hot: jnp.ndarray        # f32: P(new row from the hot set)
-    p_seq: jnp.ndarray        # f32: P(streaming row advance)
-    p_dep: jnp.ndarray        # f32: P(request depends on previous)
-    p_write: jnp.ndarray      # f32
-    stack_zipf: jnp.ndarray   # f32: Zipf exponent (>0) of the hot ranks
-    stack_geo: jnp.ndarray    # f32: geometric fallback when zipf == 0
-    hot_rows: jnp.ndarray     # i32: hot-set size (virtual table entries)
-    n_hot_banks: jnp.ndarray  # i32: banks the hot set concentrates in
+    profiles are grid data.  Distributional leaves carry a trailing
+    phase-segment axis: ``[S]`` per core, ``[C, S]`` per spec,
+    ``[grid, C, S]`` across a sweep; identity leaves (seed, core,
+    length) drop the segment axis."""
+    mean_gap: jnp.ndarray     # f32 [S]: mean bus cycles between issues
+    p_rowhit: jnp.ndarray     # f32 [S]: row-buffer hit-run probability
+    p_hot: jnp.ndarray        # f32 [S]: P(new row from the hot set)
+    p_seq: jnp.ndarray        # f32 [S]: P(streaming row advance)
+    p_dep: jnp.ndarray        # f32 [S]: P(request depends on previous)
+    p_write: jnp.ndarray      # f32 [S]
+    stack_zipf: jnp.ndarray   # f32 [S]: Zipf exponent (>0) of hot ranks
+    stack_geo: jnp.ndarray    # f32 [S]: geometric fallback when zipf == 0
+    hot_rows: jnp.ndarray     # i32 [S]: hot-set size (virtual entries)
+    n_hot_banks: jnp.ndarray  # i32 [S]: banks the hot set concentrates in
+    seg_edge: jnp.ndarray     # i32 [S]: first request index of segment s
     seed: jnp.ndarray         # i32: stream seed (shared by the spec)
     core_idx: jnp.ndarray     # i32: this core's index (row-slice + PRNG)
     n_cores: jnp.ndarray      # i32: active core count (row-slice width)
@@ -50,27 +70,59 @@ class WorkloadParams(NamedTuple):
 
 
 def profile_params(p: WorkloadProfile, length: int, seed: int,
-                   core_idx: int, n_cores: int) -> WorkloadParams:
-    """One core's traced params from a host profile."""
-    f = lambda v: jnp.float32(v)
-    i = lambda v: jnp.int32(v)
+                   core_idx: int, n_cores: int,
+                   phases: tuple = (), n_segs: int | None = None
+                   ) -> WorkloadParams:
+    """One core's traced params from a host profile.
+
+    ``phases`` is this core's resolved schedule: ``(start_frac,
+    WorkloadProfile)`` entries after the base phase.  ``n_segs`` pads
+    the segment axis to a grid-wide count (default: exactly what the
+    schedule needs)."""
+    profs = [p] + [pp for _, pp in phases]
+    edges = [0] + [int(fr * length) for fr, _ in phases]
+    S = len(profs) if n_segs is None else int(n_segs)
+    assert S >= len(profs), "n_segs smaller than the phase schedule"
+    while len(profs) < S:          # position-stable padding: repeat the
+        profs.append(profs[-1])    # last real segment, never reached
+        edges.append(int(_EDGE_INF))
+    f = lambda k: jnp.asarray([getattr(q, k) for q in profs], jnp.float32)
+    i32 = lambda v: jnp.asarray(v, jnp.int32)
     return WorkloadParams(
-        mean_gap=f(max(p.mean_gap, 1.001)), p_rowhit=f(p.p_rowhit),
-        p_hot=f(p.p_hot), p_seq=f(p.p_seq), p_dep=f(p.p_dep),
-        p_write=f(p.p_write), stack_zipf=f(p.stack_zipf),
-        stack_geo=f(p.stack_geo), hot_rows=i(p.hot_rows),
-        n_hot_banks=i(p.n_hot_banks), seed=i(seed), core_idx=i(core_idx),
-        n_cores=i(n_cores), length=i(length),
+        mean_gap=jnp.maximum(f("mean_gap"), 1.001), p_rowhit=f("p_rowhit"),
+        p_hot=f("p_hot"), p_seq=f("p_seq"), p_dep=f("p_dep"),
+        p_write=f("p_write"), stack_zipf=f("stack_zipf"),
+        stack_geo=f("stack_geo"),
+        hot_rows=i32([q.hot_rows for q in profs]),
+        n_hot_banks=i32([q.n_hot_banks for q in profs]),
+        seg_edge=i32(edges), seed=jnp.int32(seed),
+        core_idx=jnp.int32(core_idx), n_cores=jnp.int32(n_cores),
+        length=jnp.int32(length),
     )
 
 
-def spec_params(spec: WorkloadSpec) -> WorkloadParams:
-    """The ``[C]``-leaved traced pytree of a ``WorkloadSpec``."""
+def n_segs_of(specs: Sequence[WorkloadSpec]) -> int:
+    """The grid-wide phase-segment count: the largest schedule length
+    over the specs (every spec pads to it — the shape analogue of
+    ``max_len_of``)."""
+    specs = list(specs)
+    assert specs, "empty workload spec set"
+    return max(1 + len(s.phases) for s in specs)
+
+
+def spec_params(spec: WorkloadSpec,
+                n_segs: int | None = None) -> WorkloadParams:
+    """The ``[C, S]``-leaved traced pytree of a ``WorkloadSpec``."""
     assert spec.names, "WorkloadSpec has no per-core profile names"
     lengths = spec.lengths()
-    cores = [profile_params(WORKLOAD_BY_NAME[n], int(lengths[c]), spec.seed,
-                            c, spec.n_cores)
-             for c, n in enumerate(spec.names)]
+    S = n_segs if n_segs is not None else n_segs_of([spec])
+    cores = []
+    for c, n in enumerate(spec.names):
+        phases_c = tuple((fr, WORKLOAD_BY_NAME[nm[c]])
+                         for fr, nm in spec.phases)
+        cores.append(profile_params(
+            WORKLOAD_BY_NAME[n], int(lengths[c]), spec.seed, c,
+            spec.n_cores, phases=phases_c, n_segs=S))
     return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *cores)
 
 

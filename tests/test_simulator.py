@@ -70,7 +70,9 @@ def test_row_hit_faster_than_conflict():
                  SimConfig(mech=MechanismConfig(kind="base")))
     assert h["total_cycles"] < c["total_cycles"]
     assert h["row_hit_rate"] > 0.95
-    assert c["row_conflicts"] >= 1890  # all but warmup-masked requests
+    # all but warmup-masked requests and the handful the rolling REF
+    # schedule converts to closed-row accesses (a REF implies precharge)
+    assert c["row_conflicts"] >= 1880
 
 
 def test_conflict_trace_has_full_rltl():
