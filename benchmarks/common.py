@@ -107,10 +107,13 @@ def compile_counted(fn, *args, **kw):
     from repro.core import simulator as sim_mod
     from repro.kernels.sim_step import ops as sim_step_ops
     from repro.serving.loop import engine as serve_eng
+    from repro.controller import engine as ctrl_eng
     engines = (sim_mod._run_grid, sim_mod._run_batched,
                sim_mod._run_synth_batched,
                sim_step_ops._sweep_pallas, sim_step_ops._synth_pallas,
-               serve_eng._run_serving_batched, serve_eng._run_serving_pinned)
+               serve_eng._run_serving_batched, serve_eng._run_serving_pinned,
+               ctrl_eng._run_window, ctrl_eng._run_window_batched,
+               ctrl_eng._run_window_grid, ctrl_eng._run_window_synth_batched)
     before = [e._cache_size() for e in engines]
     out = fn(*args, **kw)
     compiles = sum(e._cache_size() - b

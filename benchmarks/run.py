@@ -128,10 +128,10 @@ def main() -> None:
         append_trajectory()
         return
     from benchmarks import (aldram, capacity, charge_model_bench, duration,
-                            energy, geometry, kernels_bench, megasweep,
-                            refresh, rltl, roofline_bench, serving_loop,
-                            serving_trace, simstep_bench, speedup,
-                            sweep_bench, workloads)
+                            energy, frfcfs, geometry, kernels_bench,
+                            megasweep, refresh, rltl, roofline_bench,
+                            serving_loop, serving_trace, simstep_bench,
+                            speedup, sweep_bench, workloads)
     # (name, module, declared BENCH_* artifacts the module must emit)
     mods = [
         ("charge_model", charge_model_bench, ()),
@@ -144,6 +144,7 @@ def main() -> None:
         ("geometry", geometry, ("BENCH_geometry.json",)),
         ("aldram", aldram, ("BENCH_aldram.json",)),
         ("refresh", refresh, ("BENCH_refresh.json",)),
+        ("frfcfs", frfcfs, ("BENCH_frfcfs.json",)),
         ("workloads", workloads, ("BENCH_workloads.json",)),
         ("simstep", simstep_bench, ("BENCH_simstep.json",)),
         ("serving", serving_trace, ()),

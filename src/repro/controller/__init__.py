@@ -1,0 +1,14 @@
+"""FR-FCFS controller tier (DESIGN.md §15).
+
+An opt-in second simulator tier (``SimConfig.controller="frfcfs"``) with
+a real bounded request window: row-hit-first / oldest-first selection as
+a masked argmin inside the ``lax.scan`` carry, and rank-level tRRD/tFAW
+enforced via per-rank sliding ACT timestamp windows.  Every mechanism
+registered with ``@register_mechanism`` runs unmodified on both tiers —
+the window engine delegates bank/bus/refresh/mechanism arithmetic to the
+same ``simulator._service`` the in-order tier uses.
+
+``engine``  — the traced window engine (scan-based, vmapped grid jits).
+``oracle``  — a cycle-stepped pure-numpy host reference (Ramulator2
+              style) the traced tier is cross-validated against.
+"""

@@ -35,10 +35,15 @@ and ``sweep()`` evaluates a whole evaluation grid by ``vmap``-ing over
 stacked params — one XLA compilation for the entire grid, sharded across
 devices when more than one is available.
 
-Approximations vs. Ramulator (documented in DESIGN.md): FR-FCFS is
-approximated by per-bank in-order service with dynamic multi-core
-interleave + closed-row queue-hit lookahead; tRRD/tFAW are not enforced
-(second-order for the studied mechanism, which alters tRCD/tRAS only).
+Approximations vs. Ramulator (documented in DESIGN.md): the default
+*in-order* controller tier approximates FR-FCFS by per-bank in-order
+service with dynamic multi-core interleave + closed-row queue-hit
+lookahead, and leaves tRRD/tFAW unenforced (second-order for the studied
+mechanism, which alters tRCD/tRAS only).  The opt-in
+``SimConfig.controller="frfcfs"`` tier (``repro.controller``, DESIGN.md
+§15) removes both approximations: a real bounded request window with
+row-hit-first / oldest-first selection and per-rank tRRD/tFAW sliding
+ACT windows, cross-validated against a cycle-stepped numpy host oracle.
 """
 
 from __future__ import annotations
@@ -138,6 +143,19 @@ class SimConfig:
     #: (group-gated) as an opt-in parity tier.  A traced leaf, so mixed
     #: refresh × mechanism grids share one compile.
     refresh_mode: str = "stateful"
+    #: controller tier (DESIGN.md §15): "inorder" is the classic engine
+    #: above — one request serviced per scan step in earliest-issue
+    #: order; "frfcfs" routes the launch through the
+    #: ``repro.controller`` window engine: a bounded FR-FCFS scheduler
+    #: window with row-hit-first / oldest-first selection (masked
+    #: argmin in the scan carry) and per-rank tRRD/tFAW ACT windows.
+    #: A grid containing any frfcfs point runs whole through the window
+    #: engine (one compile); its in-order points run with ``win_cap=1``,
+    #: bitwise-identical to the ref engine (tested).
+    controller: str = "inorder"
+    #: FR-FCFS scheduler window depth (requests visible to selection
+    #: per scheduling decision); consumed only when controller="frfcfs"
+    window: int = 8
 
     def __post_init__(self):
         assert self.policy in ("open", "closed")
@@ -146,6 +164,14 @@ class SimConfig:
         if self.serving is not None:
             assert self.backend == "ref", (
                 "the serving loop runs the ref engine only")
+        assert self.controller in ("inorder", "frfcfs"), self.controller
+        assert self.window >= 1, self.window
+        if self.controller == "frfcfs":
+            assert self.backend == "ref", (
+                "the FR-FCFS controller tier runs the ref engine only "
+                "(the sim_step kernel models the in-order scan)")
+            assert self.serving is None, (
+                "the serving loop models the in-order controller only")
 
 
 # --------------------------------------------------------------------------
@@ -177,6 +203,11 @@ class MechParams(NamedTuple):
     mech: dict                   # registry blocks: {policy: {leaf: array}}
     refresh_stateful: jnp.ndarray  # bool: stateful REF tier (DESIGN.md §14)
     thermal: aldram_lib.ThermalParams  # temperature drift along the stream
+    # controller tier (DESIGN.md §15): both leaves are only consumed by
+    # the repro.controller window engine — the in-order engines ignore
+    # them, so the ref/pallas tiers stay bitwise-intact
+    frfcfs: jnp.ndarray          # bool: enforce tRRD/tFAW + FR-FCFS select
+    win_cap: jnp.ndarray         # int32 active window depth (1 = in-order)
 
 
 def sim_shape(cfg: SimConfig, n_sets_max: int | None = None,
@@ -228,6 +259,8 @@ def mech_params(cfg: SimConfig, hints: dict | None = None,
             enable=jnp.asarray(th_en),
             seg_edge=jnp.asarray(th_edge),
             seg_leak=jnp.asarray(th_leak)),
+        frfcfs=jnp.bool_(cfg.controller == "frfcfs"),
+        win_cap=jnp.int32(cfg.window if cfg.controller == "frfcfs" else 1),
     )
 
 
@@ -317,6 +350,8 @@ class Events(NamedTuple):
     pre1_t: jnp.ndarray
     pre2_gid: jnp.ndarray   # auto-PRE (closed-row policy), -1 if none
     pre2_t: jnp.ndarray
+    pre3_gid: jnp.ndarray   # REF-implied PRE of the open row (stateful
+    pre3_t: jnp.ndarray     # refresh tier, DESIGN.md §14), -1 if none
 
 
 def _init_state(shape: SimShape, n_cores: int, max_len: int) -> SimState:
@@ -344,12 +379,20 @@ def _acc(stats, key, val):
 
 
 def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
-             is_write, next_same, measure, enable):
+             is_write, next_same, measure, enable, act_floor=None):
     """Serve one request; returns (new bank/bus/hcrac state pieces, done).
 
     ``enable`` marks a live scan step: padded no-op steps (see ``_run``)
     still trace through here, but their state writes are discarded by the
     caller and their events are masked out below.
+
+    ``act_floor`` is the FR-FCFS controller tier's rank-constraint hook
+    (DESIGN.md §15): when given, an activating request's ACT is delayed
+    to at least that cycle (the caller's per-rank tRRD/tFAW window), and
+    the return grows a fourth element ``(t_act, needs_act)`` so the
+    caller can update its rank ACT registers.  ``None`` (every in-order
+    caller) leaves the traced computation statically identical to the
+    pre-controller engine.
     """
     T = p.timing
     geom = p.geom
@@ -415,6 +458,11 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
         radj(t_pre + T.tRP),
         radj(jnp.maximum(t0, r_act_b)))
     needs_act = ~is_hit
+    if act_floor is not None:
+        # FR-FCFS rank windows: only an actual ACT is floor-constrained
+        # (a row hit issues no ACT; its t_act is only a mechanism-clock
+        # read and must stay untouched)
+        t_act = jnp.where(needs_act, jnp.maximum(t_act, act_floor), t_act)
 
     gid = dram_lib.global_row_id(geom, bank, row)
     cc_hit, hc = hcrac_lib.lookup(hshape, hc, gid, t_act, enable=enable,
@@ -549,6 +597,12 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
         m * needs_act * ras)
 
     # ACT/PRE events for the RLTL post-pass (see Events docstring).
+    # pre3 is the REF-implied precharge of the stateful refresh tier:
+    # the post-pass sees refresh-driven PREs, not just request-driven
+    # ones (the former DESIGN.md §14 caveat).  ``ref_pre`` already folds
+    # ``enable`` in (via do_ref), and a REF-closed row can't also be a
+    # conflict-PRE this step (openr is NO_ROW after the REF), so the two
+    # streams never double-count one precharge.
     events = Events(
         act_gid=jnp.where(needs_act & measure, gid, -1),
         act_t=t_act,
@@ -557,6 +611,8 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
         pre1_t=t_pre,
         pre2_gid=jnp.where(auto_pre & enable, gid, -1),
         pre2_t=t_autopre,
+        pre3_gid=jnp.where(ref_pre, gid_ref, -1),
+        pre3_t=ref_t,
     )
 
     # masked writes: a disabled (padded no-op) step must leave every state
@@ -587,6 +643,8 @@ def _service(shape: SimShape, p: MechParams, st: SimState, t_arr, bank, row,
         hcrac=hc,
         stats=stats,
     )
+    if act_floor is not None:
+        return new_st, done, events, (t_act, needs_act)
     return new_st, done, events
 
 
@@ -679,6 +737,28 @@ def _next_same_folded(nb: int, bank, row, length):
     return jax.vmap(per_core)(bank, row, length)
 
 
+def _retire_trailing_refs(stats: dict, core_end, p: MechParams) -> dict:
+    """Retire trailing REF windows at stream end (stateful tier only).
+
+    The in-scan ``refs_issued`` accumulation counts REF windows *observed
+    at request arrivals* — on a sparse tail the count stops at the last
+    arrival even though the controller's rolling schedule keeps issuing
+    REFs until wall-clock end.  Overwrite it with the closed-form rolling
+    schedule over ``[0, total_cycles]``: one REF per bank per elapsed
+    tREFI window, including the window opening at t=0 (``ref_due`` starts
+    at ``t0 // tREFI + 1``, i.e. the schedule has a REF at every multiple
+    of tREFI *including* 0 once any request lands).  The serving engine
+    keeps the observed-at-arrival semantics (its latency feedback loop is
+    defined on arrival-visible state; DESIGN.md §14).
+    """
+    stats = dict(stats)
+    total = jnp.max(core_end)
+    sched = (total // p.timing.tREFI + 1) * p.geom.banks_total
+    stats["refs_issued"] = jnp.where(
+        p.refresh_stateful, sched.astype(jnp.int32), stats["refs_issued"])
+    return stats
+
+
 def _run_impl(shape: SimShape, params: MechParams, trace: dict,
               warmup_steps, n_steps: int, collect_events: bool = True):
     n_cores, L = trace["gap"].shape
@@ -695,7 +775,8 @@ def _run_impl(shape: SimShape, params: MechParams, trace: dict,
     st = _init_state(shape, n_cores, L)
     step = _make_step(shape, params, trace, warmup_steps, collect_events)
     st, events = jax.lax.scan(step, st, jnp.arange(n_steps, dtype=jnp.int32))
-    return st.stats, st.core_end, events
+    stats = _retire_trailing_refs(st.stats, st.core_end, params)
+    return stats, st.core_end, events
 
 
 def _ns_tables(shape: SimShape, trace: dict, ns_geoms: GeomParams):
@@ -840,9 +921,11 @@ def _rltl_post_pass(events: Events):
     act_gid = np.asarray(events.act_gid)
     act_t = np.asarray(events.act_t)
     pre_gid = np.concatenate([np.asarray(events.pre1_gid),
-                              np.asarray(events.pre2_gid)])
+                              np.asarray(events.pre2_gid),
+                              np.asarray(events.pre3_gid)])
     pre_t = np.concatenate([np.asarray(events.pre1_t),
-                            np.asarray(events.pre2_t)])
+                            np.asarray(events.pre2_t),
+                            np.asarray(events.pre3_t)])
     am = act_gid >= 0
     pm = pre_gid >= 0
     gid = np.concatenate([act_gid[am], pre_gid[pm]])
@@ -878,11 +961,12 @@ def _rltl_device(events: Events):
     the accelerator — the per-step event stream itself (7 int32 arrays
     × n_steps × grid) stays on device however long the trace is."""
     gid = jnp.concatenate([events.act_gid, events.pre1_gid,
-                           events.pre2_gid])
-    t = jnp.concatenate([events.act_t, events.pre1_t, events.pre2_t])
+                           events.pre2_gid, events.pre3_gid])
+    t = jnp.concatenate([events.act_t, events.pre1_t, events.pre2_t,
+                         events.pre3_t])
     n = events.act_gid.shape[0]
     kind = jnp.concatenate([jnp.ones(n, jnp.int8),
-                            jnp.zeros(2 * n, jnp.int8)])  # PRE=0 < ACT=1
+                            jnp.zeros(3 * n, jnp.int8)])  # PRE=0 < ACT=1
     sent = jnp.int32(2**31 - 1)
     live = gid >= 0
     gid = jnp.where(live, gid, sent)
@@ -1014,8 +1098,15 @@ def simulate(batch: TraceBatch, cfg: SimConfig = SimConfig()) -> dict:
         f"trace arrival clock ({arrival} cycles) overflows the int32 "
         f"horizon ({int(INF)}); split the stream into shorter chunks")
     warmup = jnp.int32(int(cfg.warmup_frac * n_steps))
-    raw_stats, core_end, events = _run(sim_shape(cfg), mech_params(cfg),
-                                       trace, warmup, n_steps)
+    if cfg.controller == "frfcfs":
+        from repro.controller import engine as ctrl_engine
+        raw_stats, core_end, events = ctrl_engine._run_window(
+            sim_shape(cfg), cfg.window, mech_params(cfg), trace, warmup,
+            n_steps)
+    else:
+        raw_stats, core_end, events = _run(sim_shape(cfg),
+                                           mech_params(cfg), trace,
+                                           warmup, n_steps)
     return _finalize(raw_stats, core_end, _rltl_np(events), batch.length,
                      cfg)
 
@@ -1055,6 +1146,27 @@ def _uniform_backend(grid: Sequence[SimConfig]) -> str:
     return backend
 
 
+def _launch_controller(grid: Sequence[SimConfig],
+                       shape_grid: Sequence[SimConfig] | None = None):
+    """The controller tier of a launch and its shared static window size.
+
+    Returns ``("inorder", 1)`` when every point is in-order — the
+    existing engines then run completely unmodified (the tier-1 bitwise
+    guarantee).  If ANY point opts into ``controller="frfcfs"``, the
+    whole launch routes through the window engine
+    (``repro.controller.engine``) with ONE static window depth ``W`` =
+    the max ``cfg.window`` over grid *and* shape_grid, so every chunk of
+    one experiment shares one compile; in-order points ride along with
+    traced ``win_cap=1``, which the window engine serves
+    bitwise-identically to the in-order engine (DESIGN.md §15,
+    tests/test_controller.py)."""
+    pts = list(grid) + (list(shape_grid) if shape_grid is not None else [])
+    if all(cfg.controller == "inorder" for cfg in pts):
+        return "inorder", 1
+    return "frfcfs", max(cfg.window for cfg in pts
+                         if cfg.controller == "frfcfs")
+
+
 def _freeze_hints(hints: dict) -> tuple:
     """Hashable view of the registry pad hints (cache key component)."""
     return tuple(sorted((n, tuple(sorted(h.items())))
@@ -1064,19 +1176,21 @@ def _freeze_hints(hints: dict) -> tuple:
 @functools.lru_cache(maxsize=16384)
 def _point_params_np(timing: TimingParams, dram: DRAMConfig, policy: str,
                      mech: MechanismConfig, refresh_mode: str,
+                     controller: str, window: int,
                      hints_key: tuple, env: DRAMEnvelope):
     """One grid point's ``mech_params`` pytree as flat *numpy* leaves.
 
     ``mech_params`` only reads (timing, dram, policy, mech,
-    refresh_mode), so points differing elsewhere (a workload-seed axis,
-    serving knobs, ...) share one cache entry — and a 10⁵-point grid
-    stages from a handful of distinct entries by fancy-indexing numpy
-    columns instead of building 10⁵ × ~80 device scalars
-    (``_grid_shape_and_params``).  The hints key covers the
+    refresh_mode, controller, window), so points differing elsewhere (a
+    workload-seed axis, serving knobs, ...) share one cache entry — and
+    a 10⁵-point grid stages from a handful of distinct entries by
+    fancy-indexing numpy columns instead of building 10⁵ × ~80 device
+    scalars (``_grid_shape_and_params``).  The hints key covers the
     registered-policy set, so a temporarily registered mechanism
     (tests' ``registry.temporary``) never aliases an entry."""
     cfg = SimConfig(dram=dram, timing=timing, mech=mech, policy=policy,
-                    refresh_mode=refresh_mode)
+                    refresh_mode=refresh_mode, controller=controller,
+                    window=window)
     hints = {n: dict(h) for n, h in hints_key}
     p = mech_params(cfg, hints=hints, envelope=env)
     leaves, treedef = jax.tree_util.tree_flatten(p)
@@ -1143,17 +1257,19 @@ def _grid_shape_and_params(grid: Sequence[SimConfig],
     stacked = _stack_cached(
         grid,
         point_key=lambda cfg: (cfg.timing, cfg.dram, cfg.policy, cfg.mech,
-                               cfg.refresh_mode),
+                               cfg.refresh_mode, cfg.controller,
+                               cfg.window),
         point_leaves=lambda cfg: _point_params_np(
             cfg.timing, cfg.dram, cfg.policy, cfg.mech, cfg.refresh_mode,
-            hkey, env))
+            cfg.controller, cfg.window, hkey, env))
     return shape, stacked
 
 
 def _launch_batch(shape, stacked, trace, warmup, n_steps: int,
                   collect_events: bool, ns_geoms, ns_idx, n_grid: int,
                   backend: str = "ref",
-                  reduce_keys: tuple | None = None):
+                  reduce_keys: tuple | None = None,
+                  controller: str = "inorder", window: int = 1):
     """Dispatch one (possibly chunk-sliced) stacked-params trace launch
     and return the *unblocked* device output — the async half of
     ``sweep()``.  The §13 pipeline calls this for chunk k+1 while chunk
@@ -1161,6 +1277,14 @@ def _launch_batch(shape, stacked, trace, warmup, n_steps: int,
     touches the arrays."""
     if reduce_keys is not None:
         collect_events = False
+    if controller == "frfcfs":
+        assert backend == "ref", (
+            "the frfcfs controller tier runs the ref engine only")
+        from repro.controller import engine as ctrl_engine
+        (stacked, ns_idx), _ = _shard_grid((stacked, ns_idx), n_grid)
+        return ctrl_engine._run_window_batched(
+            shape, window, stacked, trace, warmup, n_steps,
+            collect_events, ns_geoms, ns_idx, reduce_keys)
     if backend == "pallas":
         from repro.kernels.sim_step import ops as sim_step_ops
         out = sim_step_ops.run_sweep(shape, stacked, trace, warmup,
@@ -1239,22 +1363,30 @@ def sweep(batch: TraceBatch, grid: Sequence[SimConfig],
         grid, shape_grid if shape_grid is not None else grid)
 
     n_grid = len(grid)
+    ctrl, win = _launch_controller(grid, shape_grid)
     out = _launch_batch(shape, stacked, trace, warmup, n_steps, rltl,
                         ns_geoms, ns_idx, n_grid,
                         backend=_uniform_backend(grid),
-                        reduce_keys=reduce_keys)
+                        reduce_keys=reduce_keys,
+                        controller=ctrl, window=win)
     # one device->host transfer for the whole grid, then per-point views
     return _drain_batch(out, grid, batch.length, n_grid, reduce_keys)
 
 
 def _launch_grid(shape, stacked, traces, warmups, n_steps: int,
                  collect_events: bool, ns_geoms, ns_idx, n_batch: int,
-                 reduce_keys: tuple | None = None):
+                 reduce_keys: tuple | None = None,
+                 controller: str = "inorder", window: int = 1):
     """Async dispatch of the nested [batch, grid] engine (ref tier only
     — see ``sweep_traces``); returns the unblocked device output."""
     if reduce_keys is not None:
         collect_events = False
     (traces, warmups), _ = _shard_grid((traces, warmups), n_batch)
+    if controller == "frfcfs":
+        from repro.controller import engine as ctrl_engine
+        return ctrl_engine._run_window_grid(
+            shape, window, stacked, traces, warmups, n_steps,
+            collect_events, ns_geoms, ns_idx, reduce_keys)
     return _run_grid(shape, stacked, traces, warmups, n_steps,
                      collect_events, ns_geoms, ns_idx, reduce_keys)
 
@@ -1328,8 +1460,10 @@ def sweep_traces(batches: Sequence[TraceBatch], grid: Sequence[SimConfig],
         grid, shape_grid if shape_grid is not None else grid)
 
     n_batch = len(batches)
+    ctrl, win = _launch_controller(grid, shape_grid)
     out = _launch_grid(shape, stacked, traces, warmups, n_steps, rltl,
-                       ns_geoms, ns_idx, n_batch, reduce_keys)
+                       ns_geoms, ns_idx, n_batch, reduce_keys,
+                       controller=ctrl, window=win)
     return _drain_grid(out, grid, batches, n_batch, reduce_keys)
 
 
@@ -1477,10 +1611,20 @@ def _stage_synth(grid: Sequence[SimConfig],
 def _launch_synth(shape, n_cores: int, max_len: int, stacked, wstack,
                   ilstack, warmups, n_steps: int, collect_events: bool,
                   n_grid: int, backend: str = "ref",
-                  reduce_keys: tuple | None = None):
+                  reduce_keys: tuple | None = None,
+                  controller: str = "inorder", window: int = 1):
     """Async dispatch of one synthetic launch (unblocked device out)."""
     if reduce_keys is not None:
         collect_events = False
+    if controller == "frfcfs":
+        assert backend == "ref", (
+            "the frfcfs controller tier runs the ref engine only")
+        from repro.controller import engine as ctrl_engine
+        (stacked, wstack, ilstack, warmups), _ = _shard_grid(
+            (stacked, wstack, ilstack, warmups), n_grid)
+        return ctrl_engine._run_window_synth_batched(
+            shape, window, n_cores, max_len, stacked, wstack, ilstack,
+            warmups, n_steps, collect_events, reduce_keys)
     if backend == "pallas":
         from repro.kernels.sim_step import ops as sim_step_ops
         out = sim_step_ops.run_synth(
@@ -1541,10 +1685,12 @@ def sweep_synth(grid: Sequence[SimConfig], rltl: bool = True,
     (shape, n_cores, max_len, n_steps, stacked, wstack, ilstack,
      warmups) = _stage_synth(grid, shape_grid)
     n_grid = len(grid)
+    ctrl, win = _launch_controller(grid, shape_grid)
     out = _launch_synth(shape, n_cores, max_len, stacked, wstack,
                         ilstack, warmups, n_steps, rltl, n_grid,
                         backend=_uniform_backend(grid),
-                        reduce_keys=reduce_keys)
+                        reduce_keys=reduce_keys,
+                        controller=ctrl, window=win)
     return _drain_synth(out, grid, n_grid, reduce_keys)
 
 

@@ -32,6 +32,11 @@ class TimingParams:
     tBL: int = 4     # burst length on the data bus (BL8 @ DDR)
     tRTP: int = 6    # READ -> PRE
     tWR: int = 12    # end of write burst -> PRE
+    #: rank-level ACT spacing (DDR3-1600 speed bin): consumed by the
+    #: FR-FCFS controller tier (DESIGN.md §15) — the in-order tier keeps
+    #: its documented approximation and never reads them
+    tRRD: int = 6    # ACT -> ACT, same rank (7.5 ns)
+    tFAW: int = 32   # four-ACT window per rank (40 ns)
     tREFI: int = 6240   # refresh interval (7.8 us)
     tRFC: int = 208     # refresh cycle time (260 ns, 4 Gb device)
     n_refresh_groups: int = 8192  # rows refreshed per retention window
@@ -64,6 +69,8 @@ class TimingVec(NamedTuple):
     tBL: jnp.ndarray
     tRTP: jnp.ndarray
     tWR: jnp.ndarray
+    tRRD: jnp.ndarray
+    tFAW: jnp.ndarray
     tREFI: jnp.ndarray
     tRFC: jnp.ndarray
     n_refresh_groups: jnp.ndarray

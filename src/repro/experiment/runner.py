@@ -73,6 +73,11 @@ DEFAULT_BUDGET_MB = 1024.0
 
 def _canonical(cfg: SimConfig, mode: str) -> SimConfig:
     cfg = dataclasses.replace(cfg, mech=registry.canonical_mech(cfg.mech))
+    if cfg.controller == "inorder":
+        # only the frfcfs tier reads the window depth: in-order points
+        # across a window axis are one run (DESIGN.md §15)
+        cfg = dataclasses.replace(
+            cfg, window=SimConfig.__dataclass_fields__["window"].default)
     if mode == "synth":
         if cfg.dram.n_channels == 1:
             # with one active channel every interleave policy degenerates
@@ -108,7 +113,8 @@ def _dedup(configs: list[SimConfig], enable: bool, mode: str):
 def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
                     n_cores: int, mshr: int, n_traces: int,
                     rltl: bool, n_banks_total: int = 16,
-                    n_channels: int = 2, synth: bool = False) -> int:
+                    n_channels: int = 2, synth: bool = False,
+                    window: int = 0) -> int:
     """Rough per-grid-point device-memory estimate for one launch.
 
     Dominant terms: the per-point HCRAC state (three int32 arrays, double
@@ -120,8 +126,12 @@ def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
     5.1's 16 banks), the per-point *folded* address copies + recomputed
     ``next_same`` lookahead (two int32 + one bool stream per point —
     the post-fold recompute, DESIGN.md §8), and — when events are
-    collected for RLTL — the per-step event stream (7 int32 scan
-    outputs).  The shared host trace itself is excluded; a *synthetic*
+    collected for RLTL — the per-step event stream (9 int32 scan
+    outputs).  ``window > 0`` is the frfcfs controller tier (DESIGN.md
+    §15): its carry adds the request window (9 W-length arrays), the
+    per-rank ACT registers (6 envelope-bank-sized int32 words) and the
+    per-core admission gates.  The shared host trace itself is excluded;
+    a *synthetic*
     point (``synth=True``, DESIGN.md §10) instead owns its whole
     generated stream (no host trace exists), adding the request arrays
     and generation temporaries.  With ``sweep_traces`` the whole thing
@@ -131,6 +141,12 @@ def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
     per += n_sets_max * n_ways * 3 * 4 * 2
     per += (8 * n_banks_total + 2 * n_channels) * 4 * 2
     per += n_cores * (mshr + 8) * 4
+    if window > 0:
+        # frfcfs window carry (engine.WindowState): the W-slot request
+        # window, per-rank tRRD/tFAW registers (envelope-bank bound) and
+        # the per-core admission gates — all double counted (in/out)
+        per += (9 * window + 6 * n_banks_total
+                + n_cores * (mshr + 3)) * 4 * 2
     if synth:
         # generated stream + the scan's materialized candidate-draw xs
         # (three f32 + five int32 per step) + masked output copies,
@@ -144,7 +160,7 @@ def bytes_per_point(n_steps: int, n_sets_max: int, n_ways: int,
         # each point only materializes its gathered bool view
         per += n_steps
     if rltl:
-        per += 7 * 4 * n_steps
+        per += 9 * 4 * n_steps
     return per * max(1, n_traces)
 
 
@@ -170,6 +186,8 @@ def _auto_chunk(unique: list[SimConfig], groups, rltl: bool,
     # the carry is sized by the padded geometry envelope of the grid
     n_banks_max = max(c.dram.banks_total for c in unique)
     n_ch_max = max(c.dram.n_channels for c in unique)
+    ctrl, win = sim_mod._launch_controller(unique)
+    win = win if ctrl == "frfcfs" else 0
     worst = 1
     for batches in groups.values():
         n_cores, max_len = batches[0][1].gap.shape[0], max(
@@ -178,7 +196,8 @@ def _auto_chunk(unique: list[SimConfig], groups, rltl: bool,
             n_steps=n_cores * max_len, n_sets_max=n_sets_max,
             n_ways=n_ways, n_cores=n_cores, mshr=unique[0].mshr,
             n_traces=len(batches), rltl=rltl,
-            n_banks_total=n_banks_max, n_channels=n_ch_max))
+            n_banks_total=n_banks_max, n_channels=n_ch_max,
+            window=win))
     if mode == "serving":  # fused serving scan: its own carry model
         sp = [c.serving for c in unique]
         per = 4096
@@ -197,7 +216,7 @@ def _auto_chunk(unique: list[SimConfig], groups, rltl: bool,
             n_steps=n_cores * max_len, n_sets_max=n_sets_max,
             n_ways=n_ways, n_cores=n_cores, mshr=unique[0].mshr,
             n_traces=1, rltl=rltl, n_banks_total=n_banks_max,
-            n_channels=n_ch_max, synth=True)
+            n_channels=n_ch_max, synth=True, window=win)
     ndev = max(1, len(jax.devices()))
     budget = budget_mb * 2**20 * ndev
     chunk = int(max(1, budget // worst))
@@ -411,6 +430,9 @@ def run_experiment(exp: Experiment, progress=None,
         writer.write(t * n_flat + pos, rows)
 
     # ---- stage once, then build the launch/drain work list ----------
+    # controller tier of the whole unique grid: one shared static window
+    # size so every chunk rides one window-engine compile (DESIGN.md §15)
+    ctrl, win = sim_mod._launch_controller(unique)
     work: list[tuple[Callable, Callable]] = []
 
     if serving:
@@ -450,7 +472,8 @@ def run_experiment(exp: Experiment, progress=None,
                 return sim_mod._launch_synth(
                     yshape, n_cores, max_len, sch, wch, ich, uch,
                     n_steps, exp.rltl, chunk, backend=backend,
-                    reduce_keys=reduce_keys)
+                    reduce_keys=reduce_keys, controller=ctrl,
+                    window=win)
 
             def finish(out, ci=ci):
                 row = sim_mod._drain_synth(out, chunk_cfgs[ci], chunk,
@@ -499,7 +522,8 @@ def run_experiment(exp: Experiment, progress=None,
                         return sim_mod._launch_batch(
                             tshape, sch, trace, warmup, n_req, exp.rltl,
                             ns_geoms, nch, chunk, backend=backend,
-                            reduce_keys=reduce_keys)
+                            reduce_keys=reduce_keys, controller=ctrl,
+                            window=win)
 
                     def finish(out, ci=ci, batches=batches):
                         row = sim_mod._drain_batch(
@@ -521,7 +545,7 @@ def run_experiment(exp: Experiment, progress=None,
                         return sim_mod._launch_grid(
                             tshape, sch, traces, warmups, n_steps_g,
                             exp.rltl, ns_geoms, nch, len(padded),
-                            reduce_keys)
+                            reduce_keys, controller=ctrl, window=win)
 
                     def finish(out, ci=ci, batches=batches,
                                padded=padded):

@@ -133,6 +133,25 @@ def _axis_refresh_mode(cfg: SimConfig, mode: str) -> SimConfig:
     return dataclasses.replace(cfg, refresh_mode=mode)
 
 
+@register_axis("controller")
+def _axis_controller(cfg: SimConfig, mode: str) -> SimConfig:
+    """Memory-controller tier (DESIGN.md §15): ``"inorder"`` (the
+    default per-bank in-order approximation) or ``"frfcfs"`` (the
+    opt-in bounded-window row-hit-first tier with rank-level tRRD/tFAW,
+    ``repro.controller``).  Any frfcfs point routes the whole launch
+    through the window engine with in-order points riding along at
+    ``win_cap=1`` (bitwise-identical to the in-order engine), so a
+    controller × mechanism × geometry grid is still ONE compile."""
+    return dataclasses.replace(cfg, controller=mode)
+
+
+@register_axis("window")
+def _axis_window(cfg: SimConfig, depth) -> SimConfig:
+    """FR-FCFS request-window depth (controller="frfcfs" points only;
+    in-order points dedup across this axis — runner._canonical)."""
+    return dataclasses.replace(cfg, window=int(depth))
+
+
 @register_axis("temp_drift")
 def _axis_temp_drift(cfg: SimConfig, value) -> SimConfig:
     """Temperature drift along the stream: a ``THERMAL_PRESETS`` name or

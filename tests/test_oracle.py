@@ -1,0 +1,85 @@
+"""Traced-engine vs host-oracle cross-validation (DESIGN.md §15).
+
+The FR-FCFS window engine (and its ``win_cap=1`` in-order parity mode)
+must match the pure-numpy host oracle (``repro.controller.oracle``)
+EXACTLY — every scalar stat counter, ``total_cycles`` and the per-core
+end times — on pinned request streams.  The fast tier pins a few
+mechanism/tier/geometry combinations on short streams; the ``-m slow``
+tier sweeps every registered mechanism on ~2k-request streams.
+"""
+
+import numpy as np
+import pytest
+
+from _parity import BITWISE_KEYS
+from repro.controller import oracle
+from repro.core import aldram as aldram_lib
+from repro.core import mechanisms as registry
+from repro.core.dram import DRAMConfig
+from repro.core.simulator import MechanismConfig, SimConfig, simulate
+from repro.core.traces import WorkloadSpec
+from repro.workloads.generator import materialize
+
+DRAM_2CH = DRAMConfig(n_channels=2, n_ranks=2, n_banks=8)
+
+
+def assert_oracle_matches(batch, cfg):
+    s = simulate(batch, cfg)
+    h = oracle.run_host(batch, cfg)
+    for k in BITWISE_KEYS:
+        assert int(np.asarray(s[k])) == int(h[k]), (
+            f"{k}: engine={int(np.asarray(s[k]))} oracle={int(h[k])}")
+    assert np.array_equal(np.asarray(s["core_end"]),
+                          np.asarray(h["core_end"]))
+
+
+def _pinned_batch(n_req=160, seed=7, dram=None):
+    spec = WorkloadSpec(names=("mcf_like", "omnetpp_like"), n_req=n_req,
+                        seed=seed)
+    return materialize(spec) if dram is None else materialize(spec, dram)
+
+
+@pytest.mark.parametrize("mech", ["base", "chargecache", "rltl",
+                                  "cc_aldram"])
+@pytest.mark.parametrize("ctrl,window", [("inorder", 1), ("frfcfs", 8)])
+def test_oracle_matches_engine_exactly(mech, ctrl, window):
+    batch = _pinned_batch()
+    cfg = SimConfig(mech=MechanismConfig(kind=mech), controller=ctrl,
+                    window=window)
+    assert_oracle_matches(batch, cfg)
+
+
+def test_oracle_legacy_refresh_closed_policy_multichannel():
+    batch = _pinned_batch(dram=DRAM_2CH)
+    cfg = SimConfig(mech=MechanismConfig(kind="cc_nuat"), dram=DRAM_2CH,
+                    policy="closed", refresh_mode="legacy",
+                    controller="frfcfs", window=4)
+    assert_oracle_matches(batch, cfg)
+
+
+def test_oracle_thermal_drift():
+    th = aldram_lib.ThermalConfig(points=((0.0, 55.0), (0.4, 85.0),
+                                          (0.8, 70.0)))
+    batch = _pinned_batch(dram=DRAM_2CH)
+    cfg = SimConfig(
+        mech=MechanismConfig(
+            kind="cc_aldram", thermal=th,
+            aldram=aldram_lib.ALDRAMConfig(temperature_c=55.0)),
+        dram=DRAM_2CH, controller="frfcfs", window=8)
+    assert_oracle_matches(batch, cfg)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mech", registry.names())
+@pytest.mark.parametrize("ctrl,window", [("inorder", 1), ("frfcfs", 8)])
+def test_oracle_all_mechanisms_long_stream(mech, ctrl, window):
+    """ISSUE acceptance: traced frfcfs (and the cap=1 in-order mode)
+    matches the numpy oracle EXACTLY on pinned ~2k-request streams for
+    every registered mechanism."""
+    spec = WorkloadSpec(
+        names=("mcf_like", "libquantum_like", "stream_copy_like",
+               "gcc_like"), n_req=500, seed=13)
+    batch = materialize(spec, DRAM_2CH)
+    cfg = SimConfig(mech=MechanismConfig(kind=mech), dram=DRAM_2CH,
+                    controller=ctrl, window=window)
+    assert_oracle_matches(batch, cfg)
